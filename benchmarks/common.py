@@ -1,0 +1,43 @@
+"""Shared benchmark utilities + the reduced-scale world used by the paper
+experiments (CPU container: scales recorded in EXPERIMENTS.md; relative
+orderings are what we validate against the paper)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.cost_model import SystemParams, sample_population
+from repro.data import make_dataset, partition_noniid
+
+# Reduced-scale defaults (paper: N=100, M=5, D_n in [400,700], 5 repeats)
+N_DEVICES = 40
+N_EDGES = 5
+SIZE_RANGE = (50, 90)
+REPEATS = 2
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def make_world(dataset: str = "fmnist_syn", seed: int = 0,
+               n_devices: int = N_DEVICES):
+    sp = SystemParams(n_devices=n_devices, n_edges=N_EDGES,
+                      d_range=SIZE_RANGE)
+    pop = sample_population(sp, seed=seed)
+    X, y, Xt, yt = make_dataset(dataset, n_train=6000, n_test=1000, seed=seed)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=n_devices,
+                           size_range=SIZE_RANGE, seed=seed)
+    return sp, pop, fed

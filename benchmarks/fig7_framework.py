@@ -1,0 +1,52 @@
+"""Fig. 7: full framework (Algorithm 6) — accuracy, objective (15), T, E,
+message volume vs cohort size H (reduced scale)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, make_world
+from repro.core.framework import FrameworkConfig, HFLFramework
+
+
+def run(h_values=(10, 20, 40), target_acc: float = 0.62,
+        max_iters: int = 12, out_json="results/fig7.json"):
+    summary = {}
+    for H in h_values:
+        sp, pop, fed = make_world("fmnist_syn", seed=0)
+        cfg = FrameworkConfig(scheduler="ikc" if H < fed.n_devices else "fedavg",
+                              assigner="geo", H=H, K=10,
+                              target_acc=target_acc, max_iters=max_iters,
+                              alloc_steps=100, seed=0)
+        t0 = time.perf_counter()
+        fw = HFLFramework(sp, pop, fed, cfg)
+        s = fw.run(verbose=False)
+        wall = time.perf_counter() - t0
+        summary[H] = s
+        emit(f"fig7/H{H}", wall * 1e6,
+             f"iters={s['iters']};acc={s['final_acc']:.3f};"
+             f"T={s['T']:.0f};E={s['E']:.0f};obj={s['objective']:.0f};"
+             f"msg_per_round_MB={s['msg_bits_per_round']/8e6:.1f}")
+    os.makedirs("results", exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump({str(k): {kk: vv for kk, vv in v.items() if kk != "history"}
+                   for k, v in summary.items()}, f, indent=1)
+    # paper claim: scheduling a fraction (here H=20 of 40) yields lower
+    # objective than full participation (H=40)
+    hs = sorted(summary)
+    if len(hs) >= 2:
+        frac, full = summary[hs[len(hs) // 2]], summary[hs[-1]]
+        emit("fig7/claim_partial_cheaper", 0.0,
+             f"pass={frac['objective'] < full['objective']};"
+             f"partial_obj={frac['objective']:.0f};"
+             f"full_obj={full['objective']:.0f}")
+        # per-round message volume scales with H
+        emit("fig7/claim_msgs_scale_with_H", 0.0,
+             f"pass={summary[hs[0]]['msg_bits_per_round'] < summary[hs[-1]]['msg_bits_per_round']}")
+
+
+if __name__ == "__main__":
+    run()

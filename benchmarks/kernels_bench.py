@@ -1,0 +1,42 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness +
+call overhead; MXU-aligned block shapes are the TPU-relevant artifact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.hier_agg.ops import weighted_aggregate
+from repro.kernels.kmeans_dist.ops import pairwise_sq_dists
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # kmeans distance: IKC clustering shape (100 devices x mini-model dims)
+    x = jax.random.normal(KEY, (100, 2560))
+    c = jax.random.normal(KEY, (10, 2560))
+    out, us = timed(lambda: jax.block_until_ready(
+        pairwise_sq_dists(x, c, interpret=True)))
+    emit("kernels/kmeans_dist_100x2560x10", us, "interpret=True")
+
+    # hier agg: edge aggregation of 50 device CNNs (114k params)
+    w = jax.random.uniform(KEY, (5, 50))
+    w = w / w.sum(1, keepdims=True)
+    d = jax.random.normal(KEY, (50, 114383))
+    out, us = timed(lambda: jax.block_until_ready(
+        weighted_aggregate(w, d, interpret=True)))
+    emit("kernels/hier_agg_5x50x114k", us, "interpret=True")
+
+    # flash attention: one GQA block
+    q = jax.random.normal(KEY, (1, 256, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(KEY, (1, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(KEY, (1, 256, 2, 64), jnp.bfloat16)
+    out, us = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True)))
+    emit("kernels/flash_attn_b1s256h8kv2", us, "interpret=True;causal")
+
+
+if __name__ == "__main__":
+    run()

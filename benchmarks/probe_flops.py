@@ -1,0 +1,144 @@
+"""Exact per-step HLO totals via unrolled linear probes.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so the dry-run's raw `flops` undercounts the layer scan (nb
+iterations) and the microbatch scan (mb iterations). We recover exact
+totals from three SMALL probe compiles with the scans UNROLLED
+(cfg.unroll_layers=True):
+
+    f(nb) = E + nb * B   (probes at nb=1, nb=2 with mb=1: B = f21 - f11)
+    total = f11 + (nb_full - 1) * B
+
+Microbatching does NOT change FLOP/byte totals (it splits the same global
+batch), so probes run at mb=1 with the full batch. One exception is
+collective bytes: FSDP weight all-gathers repeat once per microbatch; we
+add the analytic re-gather term (mb-1) * param_bytes(bf16)/TP to `coll`
+and record it separately as `coll_regather`.
+
+Run:  PYTHONPATH=src python -m benchmarks.probe_flops [--arch A] [--shape S]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, variant_for_shape
+from repro.launch import steps as S
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import super_block
+
+METRICS = ("flops", "bytes", "coll")
+
+
+def _measure(cfg, shape, mesh):
+    """Compile one probe; return dict of per-device totals."""
+    with mesh:
+        if shape.kind == "train":
+            step, opt = S.make_train_step(cfg, mesh)
+            ps = S.params_struct(cfg, mesh)
+            os_ = S.opt_state_struct(cfg, mesh, opt)
+            batch = S.input_specs(cfg, shape, mesh)
+            compiled = jax.jit(step).lower(ps, os_, batch).compile()
+        elif shape.kind == "prefill":
+            step = S.make_prefill_step(cfg, mesh)
+            ps = S.params_struct(cfg, mesh)
+            batch = S.input_specs(cfg, shape, mesh)
+            compiled = jax.jit(step).lower(ps, batch).compile()
+        else:
+            step = S.make_serve_step(cfg, mesh)
+            ps = S.params_struct(cfg, mesh)
+            cache = S.cache_specs_struct(cfg, shape, mesh)
+            ins = S.input_specs(cfg, shape, mesh)
+            compiled = jax.jit(step).lower(ps, cache, ins["tokens"],
+                                           ins["pos"]).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        coll = parse_collectives(compiled.as_text())
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(sum(v["bytes"] for v in coll.values()))}
+
+
+def probe_pair(arch: str, shape_name: str) -> dict:
+    mesh = make_production_mesh()
+    shape = INPUT_SHAPES[shape_name]
+    cfg_full = variant_for_shape(get_config(arch), shape)
+    sb = super_block(cfg_full)
+    nb_full = cfg_full.n_layers // sb
+    mb_full = max(1, cfg_full.microbatches) if shape.kind == "train" else 1
+
+    def probe(nb):
+        c = dataclasses.replace(cfg_full, n_layers=sb * nb,
+                                microbatches=1, unroll_layers=True)
+        return _measure(c, shape, mesh)
+
+    f11 = probe(1)
+    f21 = probe(2)
+    out = {"arch": arch, "shape": shape_name, "nb": nb_full, "mb": mb_full}
+    for m in METRICS:
+        Bv = f21[m] - f11[m]
+        out[m] = f11[m] + (nb_full - 1) * Bv
+        out[m + "_parts"] = {"E": f11[m] - Bv, "B": Bv}
+    if shape.kind == "train" and mb_full > 1:
+        # FSDP weight re-gather: each extra microbatch re-gathers the
+        # bf16 weights (model-sharded slice) once per device
+        regather = (mb_full - 1) * cfg_full.param_count() * 2 / 16
+        out["coll_regather"] = regather
+        out["coll"] += regather
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/probes.json")
+    args = ap.parse_args()
+    # cheapest-first so the table fills early (jamba's 16-layer unrolled
+    # MoE+SSD probes are by far the slowest compiles)
+    default_order = ["mamba2-2.7b", "chatglm3-6b", "musicgen-medium",
+                     "mistral-nemo-12b", "internvl2-26b",
+                     "llama4-scout-17b-a16e", "mistral-large-123b",
+                     "llama3-405b", "qwen3-moe-235b-a22b",
+                     "jamba-1.5-large-398b"]
+    archs = [args.arch] if args.arch else default_order
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"]) for r in results if "error" not in r}
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in done:
+                continue
+            t0 = time.time()
+            try:
+                rec = probe_pair(arch, shape)
+                print(f"probe {arch} x {shape}: flops={rec['flops']:.3e} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "error": f"{type(e).__name__}: {e}"}
+            results = [r for r in results
+                       if (r["arch"], r["shape"]) != (arch, shape)]
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
+reduced scale by default (CPU container); EXPERIMENTS.md records the
+scale factors and validates the paper's *relative* claims.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table2|fig34|fig5|fig6|fig7|kernels|roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal iteration counts")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived", flush=True)
+    t_all = time.time()
+
+    def want(name):
+        return args.only in (None, name)
+
+    trained = None
+    try:
+        if want("kernels"):
+            from benchmarks import kernels_bench
+            kernels_bench.run()
+        if want("table2"):
+            from benchmarks import table2_clustering
+            table2_clustering.run()
+        if want("fig5"):
+            from benchmarks import fig5_drl_curve
+            trained = fig5_drl_curve.run(
+                episodes=80 if args.fast else 400)
+        if want("fig6"):
+            from benchmarks import fig6_assignment
+            fig6_assignment.run(trained_trainer=trained,
+                                n_pops=4 if args.fast else 12)
+        if want("fig34"):
+            from benchmarks import fig34_convergence
+            fig34_convergence.run(iters=4 if args.fast else 10,
+                                  h_values=(10,) if args.fast else (10, 20))
+        if want("fig7"):
+            from benchmarks import fig7_framework
+            fig7_framework.run(h_values=(10, 20) if args.fast else (10, 20, 40),
+                               max_iters=4 if args.fast else 12)
+        if want("roofline"):
+            from benchmarks import roofline
+            roofline.run()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        print("benchmark_suite,0.0,FAILED", flush=True)
+        raise
+    print(f"benchmark_suite_total,{(time.time()-t_all)*1e6:.0f},ok",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests through the production
+serve_step (KV/SSM cache decode) — smoke-scale variants of two assigned
+architectures, one attention-based and one attention-free.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+
+
+def main():
+    for arch in ("mistral-nemo-12b", "mamba2-2.7b"):
+        print(f"\n=== serving {arch} (smoke config) ===", flush=True)
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--smoke", "--batch", "4", "--prompt-len", "16",
+             "--gen", "32"],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

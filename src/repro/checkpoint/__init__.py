@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import save_pytree, restore_pytree, latest_step  # noqa: F401

@@ -1,0 +1,60 @@
+"""Tiny pytree checkpointing: npz payload + JSON treedef manifest.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+Restores to host numpy; caller device-puts/shards as needed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree: Pytree, directory: str, step: int) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(arrays),
+                   "treedef": str(treedef)}, f)
+    return d
+
+
+def restore_pytree(template: Pytree, directory: str,
+                   step: Optional[int] = None) -> Pytree:
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints under {directory}"
+    d = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in flat]
+    leaves = [data[k] for k in keys]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for n in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", n))]
+    return max(steps) if steps else None

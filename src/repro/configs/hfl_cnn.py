@@ -1,0 +1,24 @@
+"""The paper's own HFL task model (Section VI): 2-conv CNN.
+
+Not a transformer — selected via the HFL framework (``repro.core``), not
+the big-model launcher. Kept in the registry for completeness so
+``--arch hfl-cnn`` resolves in the examples.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HFLCNNConfig:
+    name: str = "hfl-cnn"
+    family: str = "cnn"
+    conv_channels: tuple = (15, 28)
+    kernel: int = 5
+    datasets: tuple = ("fmnist_syn", "cifar_syn")
+    citation: str = "paper §VI (two 5x5 convs + two linear layers)"
+
+
+CONFIG = HFLCNNConfig()
+
+
+def smoke_config():
+    return CONFIG

@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES = {
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "hfl-cnn": "repro.configs.hfl_cnn",
+}
+
+ARCH_IDS: List[str] = [a for a in _MODULES if a != "hfl-cnn"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.smoke_config()
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-conditioned config variant.
+
+    long_500k decode requires sub-quadratic state: SSM/hybrid keep their
+    constant-size state; any config with attention layers switches to a
+    sliding-window KV cache (window 8192) — Jamba's own long-context
+    choice, applied to the dense/vlm/moe/audio archs as the documented
+    SWA variant (DESIGN.md §Arch-applicability).
+    """
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return dataclasses.replace(cfg, sliding_window=8192)
+    return cfg
+
+
+def decode_supported(cfg: ModelConfig) -> bool:
+    """All assigned archs are decoders; encoder-only archs would return
+    False here and skip decode shapes."""
+    return True

@@ -1,0 +1,5 @@
+# The paper's primary contribution: HFL device scheduling (IKC/VKC),
+# DRL-based device assignment (D3QN), convex resource allocation, and the
+# joint cost model — composed into the Algorithm-6 framework.
+from repro.core import cost_model, resource, clustering, hfl  # noqa: F401
+from repro.core.framework import HFLFramework, FrameworkConfig  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.core.assignment.hfel import HFELAssigner, total_objective  # noqa: F401
+from repro.core.assignment.geo import GeoAssigner  # noqa: F401
+from repro.core.assignment.drl import DRLAssigner  # noqa: F401

@@ -1,0 +1,28 @@
+"""Deployment wrapper: assign devices with a trained D3QN agent (greedy)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.drl.d3qn import q_values_all_t
+
+
+@dataclasses.dataclass
+class DRLAssigner:
+    sp: cm.SystemParams
+    params: dict                   # trained D3QN parameters
+
+    def __post_init__(self):
+        self._q = jax.jit(q_values_all_t)
+
+    def assign(self, pop: cm.Population, sched_idx,
+               rng=None) -> Tuple[np.ndarray, None]:
+        from repro.drl.train import drl_features
+        feats = drl_features(pop, sched_idx)
+        q = np.asarray(self._q(self.params, jnp.asarray(feats)))
+        return q.argmax(axis=-1), None

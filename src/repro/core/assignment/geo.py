@@ -1,0 +1,18 @@
+"""Geographical-distribution baseline: nearest edge (max mean gain)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cost_model as cm
+
+
+@dataclasses.dataclass
+class GeoAssigner:
+    sp: cm.SystemParams
+
+    def assign(self, pop: cm.Population, sched_idx, rng=None):
+        d = np.linalg.norm(pop.dev_pos[np.asarray(sched_idx)][:, None]
+                           - pop.edge_pos[None], axis=-1)
+        return np.argmin(d, axis=1), None

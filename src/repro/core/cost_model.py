@@ -1,0 +1,189 @@
+"""HFL system/cost model — paper §III-B, equations (4)–(14), Table I.
+
+All quantities SI: seconds, joules, hertz, watts, bits.
+
+The wireless network is *simulated* (there is no radio on a TPU pod): the
+channel model is the paper's 128.1 + 37.6 log10(d_km) path loss with 8 dB
+log-normal shadowing, FDMA uplink (6), and static edge->cloud links
+(11)-(12). Everything is vectorised jnp so schedulers/assigners/allocators
+can jit/vmap over device populations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import dbm_to_watt
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Table I."""
+    n_devices: int = 100
+    n_edges: int = 5
+    area_km: float = 1.0
+    u_range: tuple = (1e4, 1e5)            # CPU cycles / sample
+    d_range: tuple = (400, 700)            # local dataset sizes D_n
+    edge_bw_range: tuple = (0.5e6, 3e6)    # B_m  [Hz]
+    cloud_bw: float = 10e6                 # B    [Hz]
+    p_dbm_range: tuple = (0.0, 23.0)       # device transmit power
+    p_edge_dbm: float = 23.0               # edge transmit power
+    f_max: float = 2e9                     # max CPU frequency [Hz]
+    noise_dbm_hz: float = -174.0           # N0
+    alpha: float = 2e-28                   # effective capacitance (α/2 coeff)
+    shadow_db: float = 8.0
+    L: int = 5                             # local iterations
+    Q: int = 5                             # edge iterations
+    lam: float = 1.0                       # λ
+    model_bits: float = 448e3 * 8          # z (FashionMNIST CNN default)
+
+    @property
+    def n0_w_hz(self) -> float:
+        return dbm_to_watt(self.noise_dbm_hz)
+
+
+@dataclasses.dataclass
+class Population:
+    """A sampled IoT population: device features + channel gains."""
+    u: jnp.ndarray          # (N,) cycles/sample
+    D: jnp.ndarray          # (N,) samples
+    p: jnp.ndarray          # (N,) transmit power [W]
+    f_max: jnp.ndarray      # (N,) [Hz]
+    g: jnp.ndarray          # (N, M) mean uplink channel gain to each edge
+    g_cloud: jnp.ndarray    # (M,) edge->cloud gain
+    B_m: jnp.ndarray        # (M,) edge bandwidth [Hz]
+    dev_pos: np.ndarray     # (N, 2) km
+    edge_pos: np.ndarray    # (M, 2) km
+
+    @property
+    def n_devices(self) -> int:
+        return self.g.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.g.shape[1]
+
+    def features(self) -> jnp.ndarray:
+        """(N, M+3) raw per-device feature vectors (ḡ^1..ḡ^M, u, D, p)."""
+        return jnp.concatenate(
+            [self.g, self.u[:, None], self.D[:, None], self.p[:, None]], axis=1)
+
+
+def _gain(rng: np.random.Generator, dist_km: np.ndarray, shadow_db: float):
+    d = np.maximum(dist_km, 0.01)
+    pl_db = 128.1 + 37.6 * np.log10(d)
+    shadow = rng.normal(0.0, shadow_db, d.shape)
+    return 10 ** (-(pl_db + shadow) / 10.0)
+
+
+def sample_population(sp: SystemParams, seed: int = 0,
+                      d_range: Optional[tuple] = None) -> Population:
+    """Devices and edges uniform in the square; cloud at the centre."""
+    rng = np.random.default_rng(seed)
+    N, M = sp.n_devices, sp.n_edges
+    dev_pos = rng.uniform(0, sp.area_km, (N, 2))
+    edge_pos = rng.uniform(0, sp.area_km, (M, 2))
+    cloud_pos = np.array([sp.area_km / 2, sp.area_km / 2])
+    d_ne = np.linalg.norm(dev_pos[:, None] - edge_pos[None], axis=-1)
+    d_mc = np.linalg.norm(edge_pos - cloud_pos, axis=-1)
+    dr = d_range or sp.d_range
+    return Population(
+        u=jnp.asarray(rng.uniform(*sp.u_range, N)),
+        D=jnp.asarray(rng.integers(dr[0], dr[1] + 1, N).astype(np.float64)),
+        p=jnp.asarray(dbm_to_watt(rng.uniform(*sp.p_dbm_range, N))),
+        f_max=jnp.full((N,), sp.f_max),
+        g=jnp.asarray(_gain(rng, d_ne, sp.shadow_db)),
+        g_cloud=jnp.asarray(_gain(rng, d_mc, sp.shadow_db)),
+        B_m=jnp.asarray(rng.uniform(*sp.edge_bw_range, M)),
+        dev_pos=dev_pos, edge_pos=edge_pos)
+
+
+# ------------------------------------------------------- eqs (4)-(8)
+
+def t_cmp(sp: SystemParams, u, D, f):
+    """(4): per-edge-iteration computation delay."""
+    return sp.L * u * D / f
+
+
+def e_cmp(sp: SystemParams, u, D, f):
+    """(5): per-edge-iteration computation energy."""
+    return sp.alpha / 2.0 * sp.L * jnp.square(f) * u * D
+
+
+def uplink_rate(sp: SystemParams, b, g, p):
+    """(6): FDMA uplink rate [bit/s].
+
+    Numerics: computed as ((g*p)/N0) / b — never forming N0*b ~ 1e-15,
+    whose square UNDERFLOWS f32 in the division VJP (d(1/y)/dy = -1/y^2)
+    and poisons every gradient-based consumer with NaN (resource
+    allocator, HFEL; see EXPERIMENTS.md correctness notes).
+    """
+    b = jnp.maximum(b, 1.0)
+    snr = (g * p / sp.n0_w_hz) / b
+    return b * jnp.log2(1.0 + snr)
+
+
+def t_com(sp: SystemParams, b, g, p, model_bits=None):
+    """(7)."""
+    z = sp.model_bits if model_bits is None else model_bits
+    return z / uplink_rate(sp, b, g, p)
+
+
+def e_com(sp: SystemParams, b, g, p, model_bits=None):
+    """(8)."""
+    return p * t_com(sp, b, g, p, model_bits)
+
+
+# ------------------------------------------------------ eqs (9)-(12)
+
+def edge_round_cost(sp: SystemParams, u, D, p, g, b, f, mask,
+                    model_bits=None):
+    """(9),(10) for one edge: masked devices; returns (T_edge, E_edge)."""
+    tc = t_cmp(sp, u, D, f) + t_com(sp, b, g, p, model_bits)
+    ec = e_cmp(sp, u, D, f) + e_com(sp, b, g, p, model_bits)
+    big = jnp.where(mask, tc, 0.0)
+    T_edge = sp.Q * jnp.max(big)
+    E_edge = sp.Q * jnp.sum(jnp.where(mask, ec, 0.0))
+    return T_edge, E_edge
+
+
+def cloud_cost(sp: SystemParams, g_cloud_m, model_bits=None):
+    """(11),(12) for one edge server."""
+    z = sp.model_bits if model_bits is None else model_bits
+    p_m = dbm_to_watt(sp.p_edge_dbm)
+    rate = sp.cloud_bw * jnp.log2(1.0 + g_cloud_m * p_m /
+                                  (sp.n0_w_hz * sp.cloud_bw))
+    T_cloud = z / rate
+    return T_cloud, p_m * T_cloud
+
+
+# ------------------------------------------------------ eqs (13)-(14)
+
+def round_cost(sp: SystemParams, pop: Population, sched_idx, assign,
+               b, f, model_bits=None):
+    """One global iteration's (T_i, E_i, per-edge T_m, per-edge E_m).
+
+    sched_idx: (H,) device indices; assign: (H,) edge index per device;
+    b, f: (H,) allocations.
+    """
+    u, D, p = pop.u[sched_idx], pop.D[sched_idx], pop.p[sched_idx]
+    g = pop.g[sched_idx, assign]
+    tc = t_cmp(sp, u, D, f) + t_com(sp, b, g, p, model_bits)
+    ec = e_cmp(sp, u, D, f) + e_com(sp, b, g, p, model_bits)
+    M = pop.n_edges
+    onehot = jax.nn.one_hot(assign, M, dtype=tc.dtype)         # (H, M)
+    T_edge = sp.Q * jnp.max(onehot * tc[:, None], axis=0)       # (M,)
+    E_edge = sp.Q * jnp.sum(onehot * ec[:, None], axis=0)
+    T_cl, E_cl = cloud_cost(sp, pop.g_cloud, model_bits)
+    T_m = T_cl + T_edge
+    E_m = E_cl + E_edge
+    return jnp.max(T_m), jnp.sum(E_m), T_m, E_m
+
+
+def objective(sp: SystemParams, T_i, E_i):
+    """Per-round system cost E_i + λ T_i (problem (17))."""
+    return E_i + sp.lam * T_i

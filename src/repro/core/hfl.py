@@ -1,0 +1,103 @@
+"""HFL training orchestration — Algorithm 1 (one global iteration) and the
+hierarchical aggregation equations (2)-(3), plus test evaluation.
+
+Faithful semantics: at global iteration i the scheduled cohort H_i is
+partitioned over M edge servers (assignment Ψ_i). Each of Q edge
+iterations runs L local full-batch GD steps per device from that device's
+*edge* model, then data-size-weighted edge aggregation (2). After Q edge
+iterations the cloud aggregates the edge models weighted by their cohort
+data sizes (3).
+
+Implementation: devices are vmapped; edge/cloud aggregation is a masked
+einsum against the assignment one-hot, optionally routed through the
+Pallas ``hier_agg`` kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_train import cohort_local_sgd
+from repro.data.partition import FederatedData
+
+
+def pad_device_data(fed: FederatedData, Dmax: Optional[int] = None):
+    """-> X (N, Dmax, ...), y (N, Dmax), mask (N, Dmax)."""
+    N = fed.n_devices
+    Dmax = Dmax or int(max(len(y) for y in fed.y))
+    sample_shape = fed.X[0].shape[1:]
+    X = np.zeros((N, Dmax, *sample_shape), np.float32)
+    y = np.zeros((N, Dmax), np.int32)
+    mask = np.zeros((N, Dmax), np.float32)
+    for n in range(N):
+        d = min(len(fed.y[n]), Dmax)
+        X[n, :d] = fed.X[n][:d]
+        y[n, :d] = fed.y[n][:d]
+        mask[n, :d] = 1.0
+    return jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q"))
+def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
+                         sizes, assign, *, M: int, L: int, Q: int,
+                         lr: float):
+    """Algorithm 1. X/y/mask: (H, Dmax, ...) for the scheduled cohort;
+    sizes: (H,) D_n; assign: (H,) edge ids. Returns new global params."""
+    H = sizes.shape[0]
+    onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)      # (H, M)
+    w_dev = sizes.astype(jnp.float32)                          # D_n
+    edge_tot = onehot.T @ w_dev                                # (M,) D_{N_m}
+    has_dev = edge_tot > 0
+    # per-edge normalised device weights: (M, H)
+    w_edge = (onehot.T * w_dev[None, :]) / jnp.maximum(edge_tot, 1.0)[:, None]
+
+    # edge models start from the global model
+    edge_params = jax.tree.map(
+        lambda g: jnp.broadcast_to(g[None], (M,) + g.shape), global_params)
+
+    def edge_iter(edge_params, _):
+        # each device pulls its edge's model
+        dev_params = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
+                                  edge_params)
+        dev_params = cohort_local_sgd(apply_fn, dev_params, X, y, mask, L, lr)
+        # (2): weighted average per edge; empty edges keep their model
+        def agg(delta, old):
+            flat = delta.reshape(H, -1)
+            new = (w_edge @ flat).reshape((M,) + delta.shape[1:])
+            keep = has_dev.reshape((M,) + (1,) * (delta.ndim - 1))
+            return jnp.where(keep, new, old)
+        new_edge = jax.tree.map(agg, dev_params, edge_params)
+        return new_edge, None
+
+    edge_params, _ = jax.lax.scan(edge_iter, edge_params, None, length=Q)
+
+    # (3): cloud aggregation, weights D_{N_m} (empty edges weight 0)
+    w_cloud = jnp.where(has_dev, edge_tot, 0.0)
+    w_cloud = w_cloud / jnp.maximum(jnp.sum(w_cloud), 1.0)
+
+    def cloud_agg(e):
+        flat = e.reshape(M, -1)
+        return (w_cloud @ flat).reshape(e.shape[1:])
+
+    return jax.tree.map(cloud_agg, edge_params)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def evaluate_accuracy(apply_fn: Callable, params, X_test, y_test):
+    logits = apply_fn(params, X_test)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y_test).astype(jnp.float32))
+
+
+def evaluate_in_batches(apply_fn, params, X_test, y_test, batch: int = 512):
+    accs, ns = [], []
+    for i in range(0, len(y_test), batch):
+        a = evaluate_accuracy(apply_fn, params,
+                              jnp.asarray(X_test[i:i + batch]),
+                              jnp.asarray(y_test[i:i + batch]))
+        accs.append(float(a))
+        ns.append(len(y_test[i:i + batch]))
+    return float(np.average(accs, weights=ns))

@@ -1,0 +1,132 @@
+"""Resource allocation within a single edge server — problem (27).
+
+minimise   E_m + λ T_m
+           = Q Σ_n [ α/2 L f_n² u_n D_n + p_n z/η_n(b_n) ]  + E_cloud
+           + λ ( Q max_n [ L u_n D_n / f_n + z/η_n(b_n) ] + T_cloud )
+s.t.       Σ b_n <= B_m,   0 <= f_n <= f_max.
+
+The objective is jointly convex (paper §V-D). CVXPY is not available in
+this container, so we solve it natively in JAX:
+
+  * reparameterise onto the feasible set — bandwidth via a masked softmax
+    scaled by B_m (the optimum uses the full budget: both T and E strictly
+    decrease in b_n), frequency via a box sigmoid;
+  * smooth the max with a temperature-annealed log-sum-exp and run Adam;
+  * report the *hard*-max objective of the final iterate.
+
+``allocate`` is jit-compiled with a fixed device-slot count and a validity
+mask, so HFEL's search and the D3QN reward loop can call it thousands of
+times cheaply (and vmap it across edges).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import SystemParams
+
+
+class AllocResult(NamedTuple):
+    b: jnp.ndarray        # (n_slots,) bandwidth [Hz]
+    f: jnp.ndarray        # (n_slots,) CPU frequency [Hz]
+    T_edge: jnp.ndarray   # scalar: Q max_n (T_cmp + T_com)
+    E_edge: jnp.ndarray   # scalar: Q sum_n (E_cmp + E_com)
+    obj: jnp.ndarray      # E_edge + lam * T_edge   (cloud terms excluded)
+
+
+def _edge_terms(sp: SystemParams, u, D, p, g, b, f, mask):
+    t = cm.t_cmp(sp, u, D, f) + cm.t_com(sp, b, g, p)
+    e = cm.e_cmp(sp, u, D, f) + cm.e_com(sp, b, g, p)
+    t = jnp.where(mask, t, 0.0)
+    e = jnp.where(mask, e, 0.0)
+    return t, e
+
+
+@functools.partial(jax.jit, static_argnames=("sp", "steps"))
+def allocate(sp: SystemParams, u, D, p, g, B_m, mask,
+             steps: int = 300) -> AllocResult:
+    """Solve (27) for one edge. All inputs (n_slots,) + scalar B_m.
+
+    mask: bool (n_slots,) — which slots hold real devices.
+    """
+    n = u.shape[0]
+    any_dev = jnp.any(mask)
+    neg = -1e9
+
+    def unpack(theta):
+        tb, tf = theta
+        logits = jnp.where(mask, tb, neg)
+        b = B_m * jax.nn.softmax(logits)
+        f = sp.f_max * jax.nn.sigmoid(tf)
+        f = jnp.maximum(f, 1e6)
+        return b, f
+
+    def smooth_obj(theta, tau):
+        b, f = unpack(theta)
+        t, e = _edge_terms(sp, u, D, p, g, b, f, mask)
+        # finite floor, NOT -inf: grad(logsumexp) with -inf entries is NaN
+        # (poisoned every masked allocation -> HFEL silently no-opped;
+        # see EXPERIMENTS.md §Perf correctness notes)
+        tmask = jnp.where(mask, t / tau, -1e30)
+        tmax = tau * jax.scipy.special.logsumexp(tmask)
+        return sp.Q * jnp.sum(e) + sp.lam * sp.Q * tmax
+
+    theta0 = (jnp.zeros(n), jnp.full((n,), 1.0))  # f starts near 0.73 f_max
+
+    # Adam
+    lr, b1, b2, eps = 0.08, 0.9, 0.999, 1e-8
+    grad_fn = jax.grad(smooth_obj)
+
+    def body(i, carry):
+        theta, m, v = carry
+        # anneal the softmax temperature from loose to tight
+        t_hard = _hard_T(theta)
+        tau = jnp.maximum(1e-6, t_hard * (0.2 * (1.0 - i / steps) + 0.01))
+        gr = grad_fn(theta, tau)
+        m = jax.tree.map(lambda a, g_: b1 * a + (1 - b1) * g_, m, gr)
+        v = jax.tree.map(lambda a, g_: b2 * a + (1 - b2) * g_ * g_, v, gr)
+        t_ = (i + 1).astype(jnp.float32)
+        mhat = jax.tree.map(lambda a: a / (1 - b1 ** t_), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2 ** t_), v)
+        theta = jax.tree.map(lambda th, mh, vh: th - lr * mh / (jnp.sqrt(vh) + eps),
+                             theta, mhat, vhat)
+        return theta, m, v
+
+    def _hard_T(theta):
+        b, f = unpack(theta)
+        t, _ = _edge_terms(sp, u, D, p, g, b, f, mask)
+        return jnp.max(jnp.where(mask, t, 0.0)) + 1e-12
+
+    zeros = jax.tree.map(jnp.zeros_like, theta0)
+    theta, _, _ = jax.lax.fori_loop(
+        0, steps, body, (theta0, zeros, zeros))
+
+    b, f = unpack(theta)
+    t, e = _edge_terms(sp, u, D, p, g, b, f, mask)
+    T_edge = sp.Q * jnp.max(jnp.where(mask, t, 0.0))
+    E_edge = sp.Q * jnp.sum(e)
+    obj = jnp.where(any_dev, E_edge + sp.lam * T_edge, 0.0)
+    return AllocResult(b, f, jnp.where(any_dev, T_edge, 0.0),
+                       jnp.where(any_dev, E_edge, 0.0), obj)
+
+
+def allocate_uniform(sp: SystemParams, u, D, p, g, B_m, mask) -> AllocResult:
+    """Baseline: equal bandwidth split, f = f_max."""
+    n_act = jnp.maximum(jnp.sum(mask), 1)
+    b = jnp.where(mask, B_m / n_act, 1.0)
+    f = jnp.full_like(u, sp.f_max)
+    t, e = _edge_terms(sp, u, D, p, g, b, f, mask)
+    T_edge = sp.Q * jnp.max(jnp.where(mask, t, 0.0))
+    E_edge = sp.Q * jnp.sum(e)
+    return AllocResult(b, f, T_edge, E_edge, E_edge + sp.lam * T_edge)
+
+
+def edge_objective_with_cloud(sp: SystemParams, res: AllocResult,
+                              g_cloud_m) -> jnp.ndarray:
+    """E_m + λ T_m including the constant cloud-uplink terms (13),(14)."""
+    T_cl, E_cl = cm.cloud_cost(sp, g_cloud_m)
+    return (res.E_edge + E_cl) + sp.lam * (res.T_edge + T_cl)

@@ -1,0 +1,4 @@
+from repro.core.scheduling.schedulers import (  # noqa: F401
+    FedAvgScheduler, VKCScheduler, IKCScheduler, Scheduler)
+from repro.core.scheduling.device_clustering import (  # noqa: F401
+    run_device_clustering, auxiliary_weight_vectors)

@@ -1,0 +1,107 @@
+"""Device scheduling policies: FedAvg-random, VKC (Alg. 3), IKC (Alg. 4).
+
+All schedulers expose ``schedule(rng) -> np.ndarray[H]`` of device indices.
+State (IKC's per-cluster rotation sets G_k) lives on the scheduler object,
+exactly mirroring the paper's set-transfer semantics.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class Scheduler:
+    def schedule(self, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+
+class FedAvgScheduler(Scheduler):
+    """[3]: uniformly random H devices per round."""
+
+    def __init__(self, n_devices: int, H: int):
+        self.n_devices = n_devices
+        self.H = H
+
+    def schedule(self, rng) -> np.ndarray:
+        return rng.choice(self.n_devices, self.H, replace=False)
+
+
+def _topup(selected: List[int], n_devices: int, target: int, rng) -> List[int]:
+    """Alg.3 lines 12-15 / Alg.4 lines 21-24: random devices from the
+    unscheduled pool until |H_i| == target."""
+    if len(selected) < target:
+        pool = np.setdiff1d(np.arange(n_devices), np.asarray(selected, int))
+        extra = rng.choice(pool, target - len(selected), replace=False)
+        selected = selected + list(extra)
+    return selected
+
+
+class VKCScheduler(Scheduler):
+    """Algorithm 3 — vanilla K-Center: h random devices per cluster."""
+
+    def __init__(self, clusters: Sequence[int], h: int):
+        clusters = np.asarray(clusters)
+        self.n_devices = len(clusters)
+        self.K = int(clusters.max()) + 1
+        self.h = h
+        self.members = [np.flatnonzero(clusters == k) for k in range(self.K)]
+
+    @property
+    def H(self) -> int:
+        return self.h * self.K
+
+    def schedule(self, rng) -> np.ndarray:
+        sel: List[int] = []
+        for k in range(self.K):
+            ck = self.members[k]
+            if len(ck) >= self.h:                       # line 7
+                sel += list(rng.choice(ck, self.h, replace=False))
+            else:                                       # line 9
+                sel += list(ck)
+        sel = _topup(sel, self.n_devices, self.H, rng)
+        return np.asarray(sel)
+
+
+class IKCScheduler(Scheduler):
+    """Algorithm 4 — improved K-Center with per-cluster rotation sets G_k.
+
+    C_k = not-recently-scheduled members, G_k = recently scheduled. Fresh
+    devices are preferred; when C_k runs dry it is refilled from G_k,
+    guaranteeing every cluster member is scheduled before any repeats.
+    """
+
+    def __init__(self, clusters: Sequence[int], h: int):
+        clusters = np.asarray(clusters)
+        self.n_devices = len(clusters)
+        self.K = int(clusters.max()) + 1
+        self.h = h
+        self.C = [list(np.flatnonzero(clusters == k)) for k in range(self.K)]
+        self.G: List[List[int]] = [[] for _ in range(self.K)]
+
+    @property
+    def H(self) -> int:
+        return self.h * self.K
+
+    def schedule(self, rng) -> np.ndarray:
+        sel: List[int] = []
+        for k in range(self.K):
+            Ck, Gk, h = self.C[k], self.G[k], self.h
+            if len(Ck) + len(Gk) >= h:
+                if len(Ck) >= h:                        # line 9
+                    pick = list(rng.choice(Ck, h, replace=False))
+                    self.C[k] = [d for d in Ck if d not in pick]
+                    self.G[k] = Gk + pick
+                else:                                   # lines 11-14
+                    pick = list(Ck)
+                    need = h - len(pick)
+                    from_g = list(rng.choice(Gk, need, replace=False))
+                    pick += from_g
+                    remaining = [d for d in Gk if d not in from_g]
+                    self.C[k] = remaining               # line 13
+                    self.G[k] = list(pick)              # line 14
+                sel += pick
+            else:                                       # line 17
+                sel += list(Ck) + list(Gk)
+        sel = _topup(sel, self.n_devices, self.H, rng)
+        return np.asarray(sel)

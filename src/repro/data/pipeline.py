@@ -1,0 +1,46 @@
+"""Batching pipeline for the HFL trainer and the big-model trainer."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def batch_iterator(X: np.ndarray, y: np.ndarray, batch_size: int,
+                   seed: int = 0, drop_last: bool = False
+                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Infinite shuffled epochs."""
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    while True:
+        order = rng.permutation(n)
+        for i in range(0, n, batch_size):
+            sel = order[i:i + batch_size]
+            if drop_last and len(sel) < batch_size:
+                break
+            yield X[sel], y[sel]
+
+
+def sample_batch(X: np.ndarray, y: np.ndarray, batch_size: int,
+                 rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    """IID sample with replacement (local SGD step, eq. (1))."""
+    idx = rng.integers(0, len(y), batch_size)
+    return X[idx], y[idx]
+
+
+def token_batch_iterator(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Synthetic LM token stream for the big-arch example trainer:
+    structured (Zipf-ish bigram) so loss can actually go down."""
+    rng = np.random.default_rng(seed)
+    # random sparse bigram transition table
+    next_tok = rng.integers(0, vocab, size=(vocab, 4))
+    while True:
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, vocab, batch)
+        choice = rng.integers(0, 4, size=(batch, seq))
+        noise = rng.random((batch, seq)) < 0.1
+        rand = rng.integers(0, vocab, size=(batch, seq))
+        for t in range(seq):
+            nxt = next_tok[toks[:, t], choice[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,3 @@
+from repro.drl.d3qn import d3qn_init, q_values_all_t  # noqa: F401
+from repro.drl.replay import EpisodeReplay  # noqa: F401
+from repro.drl.train import D3QNTrainer, make_training_population  # noqa: F401

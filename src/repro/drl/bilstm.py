@@ -1,0 +1,58 @@
+"""Bidirectional LSTM trunk for the D3QN agent (paper Fig. 2).
+
+The agent's state at slot t (eq. 25) is (forward input χ_{n_1..n_t},
+backward input χ_{n_t..n_H}). Because the device feature sequence is
+fixed for the whole episode, one forward scan + one backward scan yield
+the encodings of ALL H states at once:
+
+    enc(s_t) = [h_fwd[t] ; h_bwd[t]]
+
+h_fwd[t] = forward LSTM state after consuming χ_t; h_bwd[t] = backward
+LSTM state after consuming χ_H..χ_t. This makes both acting and replay
+training O(H) instead of O(H^2) LSTM steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def lstm_init(key, in_dim: int, hidden: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, in_dim, 4 * hidden),
+        "wh": dense_init(k2, hidden, 4 * hidden) * 0.3,
+        "b": jnp.zeros((4 * hidden,)),
+    }
+
+
+def lstm_scan(params, xs: jnp.ndarray) -> jnp.ndarray:
+    """xs: (T, in_dim) -> hidden states (T, hidden)."""
+    hidden = params["wh"].shape[0]
+
+    def cell(carry, x):
+        h, c = carry
+        z = x @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((hidden,))
+    (_, _), hs = jax.lax.scan(cell, (h0, h0), xs)
+    return hs
+
+
+def bilstm_init(key, in_dim: int, hidden: int):
+    kf, kb = jax.random.split(key)
+    return {"fwd": lstm_init(kf, in_dim, hidden),
+            "bwd": lstm_init(kb, in_dim, hidden)}
+
+
+def bilstm_encode(params, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (H, F) -> per-slot state encodings (H, 2*hidden)."""
+    h_f = lstm_scan(params["fwd"], feats)                    # h_f[t] after χ_t
+    h_b = lstm_scan(params["bwd"], feats[::-1])[::-1]        # h_b[t] from χ_H..χ_t
+    return jnp.concatenate([h_f, h_b], axis=-1)

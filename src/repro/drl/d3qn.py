@@ -1,0 +1,35 @@
+"""Dueling Double Deep Q-Network (D3QN) over the BiLSTM trunk.
+
+Q(s, a; θ) = V(s; φ, ρ) + A(s, a; φ, ζ) − mean_a' A(s, a'; φ, ζ)   (eq. 20)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.drl.bilstm import bilstm_encode, bilstm_init
+from repro.models.layers import dense_init
+
+
+def d3qn_init(key, feat_dim: int, n_actions: int, hidden: int = 256):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc = 2 * hidden
+    return {
+        "bilstm": bilstm_init(k1, feat_dim, hidden),
+        "trunk": {"w": dense_init(k2, enc, hidden), "b": jnp.zeros((hidden,))},
+        "v_head": {"w": dense_init(k3, hidden, 1), "b": jnp.zeros((1,))},
+        "a_head": {"w": dense_init(k4, hidden, n_actions),
+                   "b": jnp.zeros((n_actions,))},
+    }
+
+
+def q_values_all_t(params, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (H, F) episode features -> Q (H, n_actions) for every slot."""
+    enc = bilstm_encode(params["bilstm"], feats)             # (H, 2h)
+    z = jax.nn.relu(enc @ params["trunk"]["w"] + params["trunk"]["b"])
+    v = z @ params["v_head"]["w"] + params["v_head"]["b"]    # (H, 1)
+    a = z @ params["a_head"]["w"] + params["a_head"]["b"]    # (H, M)
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+
+q_values_batch = jax.vmap(q_values_all_t, in_axes=(None, 0))

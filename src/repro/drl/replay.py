@@ -1,0 +1,61 @@
+"""Episode-granular replay buffer Ω.
+
+Tuples (s_t, a_t, r_t, s_{t+1}) of one episode share the same feature
+sequence, so the buffer stores per-episode (features, actions, rewards)
+and samples minibatches of O tuples as (episode, slot) pairs — the BiLSTM
+encodings are then computed once per sampled episode, not per tuple.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+class EpisodeReplay:
+    def __init__(self, capacity_episodes: int = 2000, seed: int = 0):
+        self.capacity = capacity_episodes
+        self.feats: List[np.ndarray] = []
+        self.actions: List[np.ndarray] = []
+        self.rewards: List[np.ndarray] = []
+        self._pos = 0
+
+    def push(self, feats: np.ndarray, actions: np.ndarray,
+             rewards: np.ndarray) -> None:
+        if len(self.feats) < self.capacity:
+            self.feats.append(feats)
+            self.actions.append(actions)
+            self.rewards.append(rewards)
+        else:
+            self.feats[self._pos] = feats
+            self.actions[self._pos] = actions
+            self.rewards[self._pos] = rewards
+        self._pos = (self._pos + 1) % self.capacity
+
+    def __len__(self) -> int:
+        return sum(len(a) for a in self.actions)
+
+    @property
+    def n_episodes(self) -> int:
+        return len(self.feats)
+
+    def sample(self, rng: np.random.Generator, n_tuples: int,
+               max_episodes: int = 8
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (feats (E,H,F), slots (n,), actions (n,), rewards (n,),
+        episode_of_tuple (n,))."""
+        n_ep = min(max_episodes, self.n_episodes)
+        eps = rng.choice(self.n_episodes, n_ep, replace=False)
+        feats = np.stack([self.feats[e] for e in eps])
+        H = feats.shape[1]
+        per = max(1, n_tuples // n_ep)
+        ep_idx, slots = [], []
+        for j in range(n_ep):
+            s = rng.integers(0, H, per)
+            slots.append(s)
+            ep_idx.append(np.full(per, j))
+        slots = np.concatenate(slots)
+        ep_idx = np.concatenate(ep_idx)
+        actions = np.stack([self.actions[e] for e in eps])[ep_idx, slots]
+        rewards = np.stack([self.rewards[e] for e in eps])[ep_idx, slots]
+        return feats, ep_idx, slots, actions, rewards

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for flash attention (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None, **kw) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret, **kw)

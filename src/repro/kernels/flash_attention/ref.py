@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, SWA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """q: (B, S, Hq, d), k/v: (B, S, Hkv, d) -> (B, S, Hq, d).
+
+    Materialised-softmax reference in f32.
+    """
+    B, S, Hq, d = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / jnp.sqrt(d)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, Hq, d).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.hier_agg.ops import weighted_aggregate  # noqa: F401

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the weighted-aggregation kernel + a pytree
+convenience used by the HFL trainer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hier_agg.hier_agg import weighted_aggregate_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def weighted_aggregate(weights: jnp.ndarray, deltas: jnp.ndarray,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return weighted_aggregate_pallas(weights, deltas, interpret=interpret)
+
+
+def aggregate_pytrees(weights: jnp.ndarray, device_params,
+                      interpret: bool | None = None):
+    """weights: (M, H); device_params: pytree with leading device axis H.
+    Returns pytree with leading axis M (edge models)."""
+    def leaf(x):
+        H = x.shape[0]
+        flat = x.reshape(H, -1)
+        out = weighted_aggregate(weights, flat, interpret=interpret)
+        return out.reshape((weights.shape[0],) + x.shape[1:]).astype(x.dtype)
+    return jax.tree.map(leaf, device_params)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the hierarchical weighted-aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_aggregate_ref(weights: jnp.ndarray,
+                           deltas: jnp.ndarray) -> jnp.ndarray:
+    """weights: (M, H) aggregation weights (rows already normalised);
+    deltas: (H, P) flattened per-device model updates -> (M, P) f32."""
+    return weights.astype(jnp.float32) @ deltas.astype(jnp.float32)

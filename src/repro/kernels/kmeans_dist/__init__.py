@@ -1,0 +1,1 @@
+from repro.kernels.kmeans_dist.ops import pairwise_sq_dists  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for the K-means pairwise-distance kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on a
+real TPU set ``interpret=False`` (the default flips on TPU platforms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_dist.kmeans_dist import pairwise_sq_dists_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return pairwise_sq_dists_pallas(x, c, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the pairwise squared-distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, D), c: (K, D) -> (N, K) squared euclidean distances, f32."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    cc = jnp.sum(c * c, axis=1)[None, :]
+    return jnp.maximum(xx + cc - 2.0 * (x @ c.T), 0.0)

@@ -1,0 +1,271 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices let jax.make_mesh build the production meshes; every
+step is lowered with ShapeDtypeStruct inputs (no allocation), compiled,
+and its memory_analysis / cost_analysis / collective schedule recorded
+for EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+# The VERY FIRST lines — before ANY other import (jax locks the device
+# count on first init):
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, variant_for_shape
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,512,1024]' -> bytes. Tuples handled by caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output bytes of every collective op in the (post-SPMD) HLO."""
+    out = {c: {"count": 0, "bytes": 0.0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g.:  %ag = bf16[2,16,...]{...} all-gather(...), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\{?.*?\}?\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", line)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        if shape_part.startswith("("):
+            total = sum(_shape_bytes(s.strip())
+                        for s in shape_part[1:-1].split(","))
+        else:
+            total = _shape_bytes(shape_part)
+        out[op]["count"] += 1
+        out[op]["bytes"] += total
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               extra: Optional[dict] = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = variant_for_shape(get_config(arch), shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "family": cfg.family,
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count(),
+           "sliding_window": cfg.sliding_window}
+    t0 = time.time()
+    with mesh:
+        if shape.kind in ("train", "prefill"):
+            if shape.kind == "train":
+                step, opt = S.make_train_step(cfg, mesh)
+                ps = S.params_struct(cfg, mesh)
+                os_ = S.opt_state_struct(cfg, mesh, opt)
+                batch = S.input_specs(cfg, shape, mesh)
+                lowered = jax.jit(step).lower(ps, os_, batch)
+            else:
+                step = S.make_prefill_step(cfg, mesh)
+                ps = S.params_struct(cfg, mesh)
+                batch = S.input_specs(cfg, shape, mesh)
+                lowered = jax.jit(step).lower(ps, batch)
+        else:  # decode
+            step = S.make_serve_step(cfg, mesh)
+            ps = S.params_struct(cfg, mesh)
+            cache = S.cache_specs_struct(cfg, shape, mesh)
+            ins = S.input_specs(cfg, shape, mesh)
+            lowered = jax.jit(step).lower(ps, cache, ins["tokens"], ins["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       (k in ("flops", "bytes accessed", "optimal_seconds")
+                        or k.startswith("bytes accessed"))}
+        text = compiled.as_text()
+        rec["collectives"] = parse_collectives(text)
+        rec["hlo_len"] = len(text)
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def dryrun_hfl(arch: str) -> dict:
+    """Lower the explicitly two-tier HFL step (paper mapping): per-pod
+    divergent model replicas (leading pod dim sharded over `pod`), one
+    edge iteration per pod, then a data-size-weighted cloud aggregation
+    over the pod dimension — a REAL all-reduce over the pod axis."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel import sharding as shd
+
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = mesh.shape["pod"]
+    shape = INPUT_SHAPES["train_4k"]
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": "train_4k+hfl", "mesh": "2x16x16",
+           "family": cfg.family, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count(), "sliding_window": 0}
+    t0 = time.time()
+    with mesh:
+        step = S.make_hfl_train_step(cfg, mesh)
+        base = S.params_struct(cfg, mesh)
+
+        def podded(x):
+            spec = x.sharding.spec
+            return jax.ShapeDtypeStruct(
+                (n_pods,) + x.shape, x.dtype,
+                sharding=NamedSharding(mesh, P("pod", *spec)))
+
+        pp = jax.tree.map(podded, base)
+        raw = S.input_specs(cfg, shape, mesh)
+
+        def podded_batch(x):
+            spec = list(x.sharding.spec)
+            shp = (n_pods, x.shape[0] // n_pods) + x.shape[1:]
+            return jax.ShapeDtypeStruct(
+                x.shape[:0] + shp, x.dtype,
+                sharding=NamedSharding(mesh, P("pod", "data", *spec[1:])))
+
+        batch = jax.tree.map(podded_batch, raw)
+        sync = jax.ShapeDtypeStruct((), jnp.bool_,
+                                    sharding=NamedSharding(mesh, P()))
+        lowered = jax.jit(step).lower(pp, batch, sync)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       (k in ("flops", "bytes accessed"))}
+        rec["collectives"] = parse_collectives(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--hfl-step", action="store_true",
+                    help="lower the explicit two-tier HFL step instead")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.hfl_step:
+        assert args.arch, "--hfl-step requires --arch"
+        rec = dryrun_hfl(args.arch)
+        print(json.dumps(rec, indent=1))
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                results = json.load(f)
+        else:
+            results = []
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        results = [r for r in results
+                   if (r["arch"], r["shape"], r["mesh"]) != key]
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        return
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    # --force re-runs the SELECTED combos but never drops other records
+    done = set() if args.force else {
+        (r["arch"], r["shape"], r["mesh"]) for r in results
+        if "error" not in r}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name)
+                if key in done:
+                    print(f"skip {key} (cached)")
+                    continue
+                print(f"=== dry-run {arch} x {shape} on {mesh_name}",
+                      flush=True)
+                try:
+                    rec = dryrun_one(arch, shape, mp)
+                    c = rec["cost"]
+                    print(f"    ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"flops/dev={c.get('flops', 0):.3e}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}"}
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"done: {len(results)} records, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

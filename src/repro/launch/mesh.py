@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any import).
+
+Mesh semantics (HFL mapping, DESIGN.md §3):
+  pod   (2)  — cloud tier: each pod is one edge-server cohort
+  data  (16) — devices within an edge cohort (batch / FSDP axis)
+  model (16) — tensor/expert parallel within a cohort
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """1-device mesh with the same axis names (for CPU tests)."""
+    shape = (1, 1, 1) if multi_pod else (1, 1)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link direction

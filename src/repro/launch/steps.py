@@ -1,0 +1,261 @@
+"""Distributed step builders: train_step / serve_step + input_specs.
+
+These are the functions the multi-pod dry-run lowers and compiles for
+every (architecture x input-shape x mesh) combination, and that the real
+launchers (train.py / serve.py) execute.
+
+train_step semantics (HFL mapping):
+  * the global batch is sharded over (pod, data) — each pod is an edge
+    cohort, each data-axis slice a device group;
+  * L_local microbatches are grad-accumulated via lax.scan (the paper's L
+    local iterations fused into one lowered step);
+  * gradient reduction over `data` (edge aggregation, eq. 2) happens in
+    the backward pass; with `cloud_sync=True` an explicit parameter
+    all-reduce over `pod` (cloud aggregation, eq. 3) is appended — in the
+    faithful trainer it fires every Q steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.optim import adafactor, adam
+from repro.parallel.sharder import MeshSharder
+from repro.parallel import sharding as shd
+
+BIG_MODEL_PARAMS = 20e9      # adafactor above this
+
+
+# ------------------------------------------------------------ input specs
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+    shardable, no device allocation."""
+    dp = shd.batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(mesh, shd.fit_spec(mesh, shp, spec)))
+
+    if shape.kind in ("train", "prefill"):
+        n_pre = cfg.n_prefix_embeds
+        s_text = S - n_pre
+        if cfg.family == "audio" and cfg.n_codebooks > 1:
+            toks = sds((B, s_text, cfg.n_codebooks), jnp.int32, P(dp, None, None))
+            labs = sds((B, s_text, cfg.n_codebooks), jnp.int32, P(dp, None, None))
+        else:
+            toks = sds((B, s_text), jnp.int32, P(dp, None))
+            labs = sds((B, s_text), jnp.int32, P(dp, None))
+        batch = {"tokens": toks, "labels": labs}
+        if n_pre > 0:
+            batch["prefix_embeds"] = sds((B, n_pre, cfg.d_model),
+                                         cfg.compute_dtype, P(dp, None, None))
+        return batch
+    # decode: one token per sequence against a seq_len-deep cache
+    if cfg.family == "audio" and cfg.n_codebooks > 1:
+        toks = sds((B, 1, cfg.n_codebooks), jnp.int32, P(dp, None, None))
+    else:
+        toks = sds((B, 1), jnp.int32, P(dp, None))
+    return {"tokens": toks,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32,
+                                        sharding=NamedSharding(mesh, P()))}
+
+
+def cache_specs_struct(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Decode-cache ShapeDtypeStructs (via eval_shape — no allocation)."""
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+    shardings = shd.cache_shardings(cache_shape, cfg, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        cache_shape, shardings)
+
+
+def params_struct(cfg: ModelConfig, mesh: Mesh):
+    shape_tree = jax.eval_shape(
+        lambda: T.init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32))
+    shardings = shd.param_shardings(shape_tree, cfg, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        shape_tree, shardings)
+
+
+# ------------------------------------------------------------- optimizers
+
+def make_optimizer(cfg: ModelConfig, lr: float = 1e-4):
+    if cfg.param_count() > BIG_MODEL_PARAMS:
+        return adafactor(lr)
+    return adam(lr)
+
+
+def opt_state_struct(cfg: ModelConfig, mesh: Mesh, opt):
+    """Optimizer-state ShapeDtypeStructs; moments inherit the sharding of
+    their parameter (matched by shape), adafactor row/col factors inherit
+    the param spec with the reduced dim dropped."""
+    ps = params_struct(cfg, mesh)
+    st = jax.eval_shape(opt.init, ps)
+    flat_p = jax.tree.leaves(ps)
+    specs_p = jax.tree.leaves(shd.param_specs(ps, cfg, mesh))
+    by_shape = {}
+    for leaf, spec in zip(flat_p, specs_p):
+        by_shape.setdefault(leaf.shape, spec)
+
+    def assign(x):
+        spec = by_shape.get(x.shape, P())
+        # factored adafactor rows/cols: reuse the param spec minus last dim
+        if x.shape not in by_shape:
+            for pshape, pspec in by_shape.items():
+                if x.shape == pshape[:-1]:
+                    spec = P(*list(pspec)[:-1])
+                    break
+                if len(pshape) >= 2 and x.shape == pshape[:-2] + pshape[-1:]:
+                    ent = list(pspec) + [None] * (len(pshape) - len(pspec))
+                    spec = P(*(ent[:-2] + ent[-1:]))
+                    break
+        return jax.ShapeDtypeStruct(
+            x.shape, x.dtype,
+            sharding=NamedSharding(mesh, shd.fit_spec(mesh, x.shape, spec)))
+
+    return jax.tree.map(assign, st)
+
+
+# -------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-4,
+                    cloud_sync: Optional[bool] = None, impl: str = "xla"):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    cloud_sync defaults to True iff the mesh has a pod axis (so the
+    lowered artifact exhibits the full two-tier HFL collective pattern).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    if cloud_sync is None:
+        cloud_sync = multi_pod
+    opt = make_optimizer(cfg, lr)
+    sharder = MeshSharder(mesh, shd.act_rules(cfg, mesh))
+    mb = max(1, cfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p, microbatch):
+            # pin params at use: with_sharding_constraint transposes to a
+            # constraint on the cotangent, keeping per-layer grads sharded
+            # instead of all-gathered full (3.5 GB/leaf f32 for
+            # llama3-405b before the fix; §Perf iteration 3). [A casting-
+            # to-bf16-here variant was tried and REFUTED: identical
+            # collective bytes, +4 GB temp — XLA already gathers bf16
+            # inside the layer loop; see §Perf iteration 4.]
+            p = jax.tree.map(jax.lax.with_sharding_constraint, p,
+                             shd.param_shardings(p, cfg, mesh))
+            loss, metrics = T.loss_fn(p, microbatch, cfg, sharder=sharder,
+                                      impl=impl)
+            return loss, metrics
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        # pin the grad-accumulation carry to the parameter shardings —
+        # without the constraint XLA materialises REPLICATED f32 grads
+        # (3.5 GB/leaf for llama3-405b; §Perf iteration 3)
+        pshard = shd.param_shardings(params, cfg, mesh)
+        pin = lambda tree: jax.tree.map(
+            jax.lax.with_sharding_constraint, tree, pshard)
+
+        def accum(carry, mb_batch):
+            g_acc, l_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb_batch)
+            return (pin(jax.tree.map(jnp.add, g_acc, g)), l_acc + loss), None
+
+        g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+        (grads, loss_sum), _ = jax.lax.scan(
+            accum, (g0, 0.0), micro,
+            unroll=mb if cfg.unroll_layers else 1)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        # edge aggregation (eq. 2) = the grad all-reduce over `data`;
+        # with the batch also sharded over `pod`, the same reduction spans
+        # the pod axis — the multi-pod dry-run proves that axis shards.
+        # The *explicitly two-tier* variant (divergent per-pod replicas,
+        # Q-periodic cloud sync) is make_hfl_train_step below.
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss_sum / mb}
+        return new_params, new_opt, metrics
+
+    return train_step, opt
+
+
+def make_hfl_train_step(cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-4,
+                        impl: str = "xla"):
+    """Paper-faithful two-tier step: every pod (edge cohort) holds its OWN
+    model replica (leading pod dim, sharded over `pod`); the step runs one
+    edge iteration per pod and then cloud-aggregates (eq. 3) with an
+    explicit data-size-weighted mean over the pod dimension — which lowers
+    to a real all-reduce/all-gather over the pod axis.
+
+    params leaves: (n_pods, ...) sharded P("pod", <param spec>).
+    batch leaves:  (n_pods, B/pods, ...) sharded P("pod", "data", ...).
+    """
+    assert "pod" in mesh.axis_names, "hfl step needs the multi-pod mesh"
+    n_pods = mesh.shape["pod"]
+    sharder = MeshSharder(mesh, shd.act_rules(cfg, mesh))
+    mb = max(1, cfg.microbatches)
+
+    def one_pod_step(params, batch):
+        def loss_of(p, microbatch):
+            return T.loss_fn(p, microbatch, cfg, impl=impl)[0]
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def accum(g_acc, mb_batch):
+            g = jax.grad(loss_of)(params, mb_batch)
+            return jax.tree.map(jnp.add, g_acc, g), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, _ = jax.lax.scan(accum, g0, micro)
+        return jax.tree.map(lambda p, g: p - lr * g / mb, params, grads)
+
+    def hfl_train_step(pod_params, batch, do_cloud_sync):
+        new_pp = jax.vmap(one_pod_step)(pod_params, batch)
+        # cloud aggregation: mean over the pod dim (all-reduce over `pod`)
+        synced = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                       x.shape), new_pp)
+        pick = lambda a, b: jnp.where(do_cloud_sync, a, b)
+        return jax.tree.map(pick, synced, new_pp)
+
+    return hfl_train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh):
+    """serve_step(params, cache, tokens, pos) -> (logits, cache)."""
+    sharder = MeshSharder(mesh, shd.act_rules(cfg, mesh))
+
+    def serve_step(params, cache, tokens, pos):
+        return T.decode(params, tokens, cache, pos, cfg, sharder=sharder)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, impl: str = "xla"):
+    sharder = MeshSharder(mesh, shd.act_rules(cfg, mesh))
+
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch, cfg, sharder=sharder, impl=impl)
+        return logits
+
+    return prefill_step

@@ -1,0 +1,99 @@
+"""Distributed trainer CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch chatglm3-6b --smoke \
+        --steps 200 --batch 16 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this CPU container the debug mesh (1 device) is used automatically and
+``--smoke`` selects the reduced config; on a real TPU slice the production
+mesh from ``repro.launch.mesh`` drives the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+from repro.configs.registry import get_config, get_smoke_config
+from repro.data.pipeline import token_batch_iterator
+from repro.launch import steps as S
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.utils import tree_size
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.microbatches:
+        cfg = dataclasses.replace(cfg, microbatches=args.microbatches)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_debug_mesh())
+    print(f"arch={cfg.name} params={tree_size(jax.eval_shape(lambda: T.init(jax.random.PRNGKey(0), cfg)))/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}", flush=True)
+
+    with mesh:
+        step_fn, opt = S.make_train_step(cfg, mesh, lr=args.lr)
+        params = T.init(jax.random.PRNGKey(args.seed), cfg)
+        opt_state = opt.init(params)
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            start = latest_step(args.ckpt_dir)
+            params = restore_pytree(params, args.ckpt_dir)
+            print(f"restored step {start}", flush=True)
+        step_j = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        it = token_batch_iterator(cfg.vocab_size, args.batch, args.seq,
+                                  seed=args.seed)
+        t0 = time.time()
+        tokens_seen = 0
+        for i in range(start + 1, args.steps + 1):
+            raw = next(it)
+            batch = {"tokens": jnp.asarray(raw["tokens"]),
+                     "labels": jnp.asarray(raw["labels"])}
+            if cfg.n_prefix_embeds:
+                batch["prefix_embeds"] = jnp.zeros(
+                    (args.batch, cfg.n_prefix_embeds, cfg.d_model),
+                    cfg.compute_dtype)
+            if cfg.n_codebooks > 1:
+                batch["tokens"] = jnp.broadcast_to(
+                    batch["tokens"][..., None],
+                    batch["tokens"].shape + (cfg.n_codebooks,))
+                batch["labels"] = jnp.broadcast_to(
+                    batch["labels"][..., None],
+                    batch["labels"].shape + (cfg.n_codebooks,))
+            params, opt_state, metrics = step_j(params, opt_state, batch)
+            tokens_seen += args.batch * args.seq
+            if i % args.log_every == 0:
+                loss = float(metrics["loss"])
+                tps = tokens_seen / (time.time() - t0)
+                print(f"step {i:5d} loss={loss:.4f} tok/s={tps:,.0f}",
+                      flush=True)
+            if args.ckpt_dir and i % args.ckpt_every == 0:
+                save_pytree(params, args.ckpt_dir, i)
+        if args.ckpt_dir:
+            save_pytree(params, args.ckpt_dir, args.steps)
+    print("done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

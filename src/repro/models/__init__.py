@@ -1,0 +1,1 @@
+from repro.models import attention, cnn, frontend, layers, mamba2, moe, transformer  # noqa: F401

@@ -1,0 +1,29 @@
+"""Modality-frontend STUBS (the one allowed carve-out).
+
+VLM (InternVL2): the InternViT-6B vision encoder + MLP projector is not
+reproduced; ``vision_patch_embeds`` emits patch embeddings with the exact
+interface contract (B, n_patches, d_model) the language model consumes.
+
+Audio (MusicGen): the EnCodec conv codec is not reproduced;
+``encodec_tokens`` emits K parallel codebook token streams (B, S, K) in
+[0, vocab). The decoder-only transformer over these tokens IS implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vision_patch_embeds(key, batch: int, cfg: ModelConfig,
+                        dtype=jnp.float32) -> jnp.ndarray:
+    """Stub ViT output: (B, cfg.n_prefix_embeds, d_model)."""
+    return (jax.random.normal(key, (batch, cfg.n_prefix_embeds, cfg.d_model))
+            * 0.02).astype(dtype)
+
+
+def encodec_tokens(key, batch: int, seq: int, cfg: ModelConfig) -> jnp.ndarray:
+    """Stub EnCodec tokens: (B, S, n_codebooks) int32."""
+    return jax.random.randint(key, (batch, seq, cfg.n_codebooks), 0,
+                              cfg.vocab_size, dtype=jnp.int32)

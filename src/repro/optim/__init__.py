@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, adam, adafactor, clip_by_global_norm)
+from repro.optim.schedules import constant, cosine, warmup_cosine  # noqa: F401

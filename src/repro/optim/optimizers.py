@@ -1,0 +1,147 @@
+"""Minimal optax-style optimizers built in-repo (offline substrate).
+
+Each optimizer is an ``Optimizer(init, update)`` pair over parameter
+pytrees. ``update(grads, state, params) -> (new_params, new_state)``.
+
+* ``sgd``       — (momentum) SGD; the HFL local trainer (paper eq. (1)).
+* ``adam``      — AdamW for the D3QN agent and small-model runs.
+* ``adafactor`` — factored second moment (Shazeer & Stern); the default
+  for >=100B configs in the dry-run: state is ~params bytes/row+col,
+  which is what makes 405B fit the 16 GiB/chip budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple]
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+    gn = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# -------------------------------------------------------------------- SGD
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum > 0:
+            st["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr_fn(step)
+        if momentum > 0:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new_params = jax.tree.map(lambda p, m: p - lr_t * m, params, mu)
+            return new_params, {"step": step + 1, "mu": mu}
+        new_params = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+        return new_params, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------------- Adam
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# -------------------------------------------------------------- Adafactor
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored 2nd moment for matrices; full for vectors/scalars."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(leaf, params,
+                                    is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def leaf(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(g.shape):
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g32 * rfac[..., None] * jnp.expand_dims(cfac, -2)
+                nst = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                nst = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), nst
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["mom"])
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_mom = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"step": step, "mom": new_mom}
+
+    return Optimizer(init, update)

@@ -1,0 +1,1 @@
+from repro.parallel.sharder import Sharder, NoopSharder, MeshSharder  # noqa: F401

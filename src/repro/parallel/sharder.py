@@ -1,0 +1,49 @@
+"""Activation-sharding hooks threaded through the model code.
+
+Models call ``sharder.act(x, kind)`` at layer boundaries; the default
+``NoopSharder`` makes single-device runs (tests, CPU training) free of any
+mesh dependence, while ``MeshSharder`` applies
+``jax.lax.with_sharding_constraint`` according to the logical-axis rules in
+``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Sharder:
+    #: number of batch shards (drives per-shard MoE dispatch chunking)
+    data_chunks: int = 1
+
+    def act(self, x, kind: str):
+        raise NotImplementedError
+
+
+class NoopSharder(Sharder):
+    def act(self, x, kind: str):
+        return x
+
+
+class MeshSharder(Sharder):
+    """kind -> PartitionSpec table, applied inside jit with a mesh."""
+
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = rules
+        self.data_chunks = int(mesh.shape.get("data", 1)) * \
+            int(mesh.shape.get("pod", 1))
+
+    def act(self, x, kind: str):
+        spec = self.rules.get(kind)
+        if spec is None or x.ndim != len(spec):
+            return x
+        from repro.parallel.sharding import fit_spec
+        spec = fit_spec(self.mesh, x.shape, spec)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NOOP = NoopSharder()

@@ -1,0 +1,192 @@
+"""Parameter/activation sharding rules: FSDP(data) x TP(model) [+ pod].
+
+Mesh axes:
+  pod   — cloud tier: one pod per HFL "edge-server group" (multi-pod only)
+  data  — devices-within-edge cohort: batch/FSDP axis
+  model — tensor/expert parallel axis
+
+Param rules (leaf-name based, applied to the stacked block trees whose
+leading axis is the layer-stack):
+
+  tp_strategy="heads" (Megatron col/row over attention heads):
+    wq (D, Hq*hd)        -> (data, model)     col-parallel
+    wk/wv (D, Hkv*hd)    -> (data, None)      kv computed replicated (GQA
+                                              kv-heads < 16; tiny matmul)
+    wo (Hq*hd, D)        -> (model, data)     row-parallel
+  tp_strategy="feature" (n_heads % 16 != 0 — musicgen, llama4-scout):
+    attention weights FSDP-only; MLP/experts still TP-sharded.
+
+  mlp w_gate/w_up (D,F)  -> (data, model);  w_down (F,D) -> (model, data)
+  moe experts (E,D,F)    -> (model, data, None)   expert parallelism
+  embed (V, D)           -> (model, data);  lm_head (D,V) -> (data, model)
+  mamba in_proj (D, dip) -> (data, model);  out_proj (di,D) -> (model, data)
+  norms / scalars        -> replicated
+
+Every rule is divisibility-checked against the actual leaf shape and the
+mesh axis sizes; axes that do not divide are dropped (e.g. batch=1 for
+long_500k decode).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def fit_spec(mesh: Mesh, shape, spec: P) -> P:
+    """Drop spec axes whose size does not divide the dimension."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, name in zip(shape, entries):
+        if name is not None and dim % _axis_size(mesh, name) == 0:
+            out.append(name)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ------------------------------------------------------------ parameters
+
+def _param_rule(path: str, ndim: int, cfg: ModelConfig) -> P:
+    heads_tp = cfg.tp_strategy == "heads"
+
+    def blocked(*spec):
+        """Prepend None for the layer-stack axis if the leaf is stacked."""
+        if ndim == len(spec) + 1:
+            return P(None, *spec)
+        return P(*spec)
+
+    if path.endswith("embed"):
+        return P("model", "data")
+    if path.endswith("lm_head"):
+        return P("data", "model")
+    if "scale" in path or path.endswith(("A_log", "D_skip", "dt_bias", "b")):
+        return P()
+    if "mix/" in path or "/mix" in path:
+        if path.endswith("wq"):
+            return blocked("data", "model") if heads_tp else blocked("data", None)
+        if path.endswith(("wk", "wv")):
+            return blocked("data", None)
+        if path.endswith("wo"):
+            return blocked("model", "data") if heads_tp else blocked(None, "data")
+        if path.endswith(("in_proj", "wz", "wx")):
+            return blocked("data", "model")
+        if path.endswith(("wb", "wc", "wdt")):
+            return blocked("data", None)
+        if path.endswith("out_proj"):
+            return blocked("model", "data")
+        if path.endswith(("conv_w", "conv_x")):
+            return blocked("model", None)
+        if path.endswith(("conv_b", "conv_c")):
+            return blocked()
+    if path.endswith(("w_gate", "w_up")):
+        # (D,F) | (layers,D,F) dense -> col-parallel; (layers,E,D,F) or
+        # (E,D,F) experts -> expert-parallel over model, FSDP on D
+        if ndim == 4:
+            return P(None, "model", "data", None)
+        if ndim == 3 and "blocks" not in path:
+            return P("model", "data", None)
+        return blocked("data", "model")
+    if path.endswith("w_down"):
+        if ndim == 4:
+            return P(None, "model", None, "data")
+        if ndim == 3 and "blocks" not in path:
+            return P("model", None, "data")
+        return blocked("model", "data")
+    if path.endswith("router"):
+        return blocked("data", None)
+    return P()
+
+
+def _leaf_path(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = _leaf_path(path)
+        spec = _param_rule(p, leaf.ndim, cfg)
+        specs.append(fit_spec(mesh, leaf.shape, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, cfg, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, cfg, mesh))
+
+
+# ------------------------------------------------------------ activations
+
+def act_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    dp = batch_axes(mesh)
+    heads_tp = cfg.tp_strategy == "heads"
+    # sequence parallelism: the residual stream (the remat-scan carry that
+    # dominates activation memory) is additionally sharded over `model`
+    resid = P(dp, "model", None) if cfg.seq_shard else P(dp, None, None)
+    return {
+        "act_resid": resid,
+        "act_resid_decode": P(dp, None, None),
+        "act_heads": P(dp, None, "model", None) if heads_tp
+                     else P(dp, None, None, None),
+        "act_kv_heads": P(dp, None, None, None),
+        # chunked-prefill scores (B, Hkv, G, bq, S_kv)
+        "attn_scores_heads": P(dp, "model", None, None, None),
+        "attn_scores_seq": P(dp, None, None, None, "model"),
+        "ssm_heads": P(dp, None, "model", None),
+        "ssm_chunk_x": P(dp, None, None, "model", None),
+        "ssm_chunk_bc": P(dp, None, None, "model", None),
+        "ssm_chunk_cum": P(dp, None, None, "model"),
+        "ssm_chunk_ij": P(dp, None, None, None, "model"),
+        # (gd, E, C, D/F): data-chunks over batch axes, experts over model
+        "moe_buffer": P(dp, "model", None, None),
+        "moe_hidden": P(dp, "model", None, None),
+        "logits": P(dp, None, "model"),
+    }
+
+
+# ------------------------------------------------------------- caches
+
+def cache_specs(cache, cfg: ModelConfig, mesh: Mesh):
+    """Decode-cache shardings: batch over (pod,data) when divisible;
+    KV slots over model (sequence-parallel cache); SSM heads over model."""
+    dp = batch_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, x in flat:
+        name = _leaf_path(path)
+        if name.endswith(("k", "v")):        # (nb, B, slots, Hkv, hd)
+            spec = P(None, dp, "model", None, None)
+        elif name.endswith("ssm"):           # (nb, B, H, hd, dstate)
+            spec = P(None, dp, "model", None, None)
+        elif name.endswith("conv"):          # (nb, B, W-1, conv_dim)
+            spec = P(None, dp, None, "model")
+        else:
+            spec = P()
+        specs.append(fit_spec(mesh, x.shape, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_shardings(cache, cfg, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cache, cfg, mesh))

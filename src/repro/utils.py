@@ -1,0 +1,118 @@
+"""Shared small utilities: pytree math, rng splitting, shape helpers."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y, leaf-wise."""
+    return jax.tree.map(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_weighted_sum(trees: Iterable[Pytree], weights) -> Pytree:
+    """sum_i w_i * tree_i (weights need not be normalised)."""
+    trees = list(trees)
+    weights = list(weights)
+    assert len(trees) == len(weights) and trees, "empty weighted sum"
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_axpy(w, t, out)
+    return out
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_norm(tree: Pytree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def tree_flatten_to_vector(tree: Pytree) -> jnp.ndarray:
+    """Concatenate all leaves into a single f32 vector (for clustering)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, multiple: int) -> int:
+    return ceil_div(x, multiple) * multiple
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024 or unit == "PiB":
+            return f"{n:.2f} {unit}"
+        n /= 1024
+    return f"{n:.2f} PiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("FLOP", "KFLOP", "MFLOP", "GFLOP", "TFLOP", "PFLOP", "EFLOP"):
+        if abs(n) < 1000 or unit == "EFLOP":
+            return f"{n:.2f} {unit}"
+        n /= 1000
+    return f"{n:.2f} EFLOP"
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10 ** (dbm / 10.0) / 1000.0
+
+
+def db_to_linear(db) -> float:
+    return 10 ** (db / 10.0)
+
+
+def stable_hash(s: str) -> int:
+    """Deterministic (non-salted) string hash for seeding."""
+    h = 2166136261
+    for c in s.encode():
+        h = (h ^ c) * 16777619 & 0xFFFFFFFF
+    return h

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device (only launch/dryrun.py forces 512 placeholders)."""
+import os
+
+# determinism + quieter logs
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,47 @@
+"""Device assignment: HFEL search improves the objective; baselines valid."""
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.assignment import GeoAssigner, HFELAssigner
+from repro.core.assignment.hfel import total_objective
+
+SP = cm.SystemParams(n_devices=20, n_edges=4)
+POP = cm.sample_population(SP, seed=5)
+SCHED = np.arange(20)
+
+
+def test_geo_assigns_nearest_edge():
+    a, _ = GeoAssigner(SP).assign(POP, SCHED)
+    assert a.shape == (20,)
+    d = np.linalg.norm(POP.dev_pos[:, None] - POP.edge_pos[None], axis=-1)
+    assert np.array_equal(a, d.argmin(axis=1))
+
+
+def test_hfel_improves_over_geo_init():
+    rng = np.random.default_rng(0)
+    geo, _ = GeoAssigner(SP).assign(POP, SCHED)
+    j_geo, _, _ = total_objective(SP, POP, SCHED, geo, alloc_steps=120)
+    hfel = HFELAssigner(SP, n_transfer=40, n_exchange=80, alloc_steps=120)
+    a, j_hfel = hfel.assign(POP, SCHED, rng)
+    assert a.shape == (20,)
+    assert set(a.tolist()) <= set(range(SP.n_edges))    # (15f) valid edges
+    assert j_hfel <= j_geo * 1.001
+
+
+def test_hfel_objective_matches_total_objective():
+    rng = np.random.default_rng(1)
+    hfel = HFELAssigner(SP, n_transfer=20, n_exchange=30, alloc_steps=120)
+    a, j = hfel.assign(POP, SCHED, rng)
+    j2, T_m, E_m = total_objective(SP, POP, SCHED, a, alloc_steps=120)
+    assert j == pytest.approx(j2, rel=0.05)
+    assert np.all(T_m >= 0) and np.all(E_m >= 0)
+
+
+def test_more_search_never_worse():
+    rng1, rng2 = np.random.default_rng(2), np.random.default_rng(2)
+    short = HFELAssigner(SP, n_transfer=10, n_exchange=10, alloc_steps=100)
+    long_ = HFELAssigner(SP, n_transfer=60, n_exchange=120, alloc_steps=100)
+    _, j_short = short.assign(POP, SCHED, rng1)
+    _, j_long = long_.assign(POP, SCHED, rng2)
+    assert j_long <= j_short * 1.01

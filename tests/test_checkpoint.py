@@ -1,0 +1,29 @@
+"""Checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": [jnp.zeros(2), jnp.full((1,), 7)]},
+            "step": jnp.int32(17)}
+    d = str(tmp_path / "ck")
+    save_pytree(tree, d, step=3)
+    save_pytree(jax.tree.map(lambda x: x + 1 if x.dtype != jnp.bfloat16 else x,
+                             tree), d, step=7)
+    assert latest_step(d) == 7
+    out3 = restore_pytree(tree, d, step=3)
+    np.testing.assert_array_equal(np.asarray(out3["a"]),
+                                  np.asarray(tree["a"]))
+    out7 = restore_pytree(tree, d)
+    np.testing.assert_array_equal(np.asarray(out7["a"]),
+                                  np.asarray(tree["a"]) + 1)
+    assert int(out7["step"]) == 18
+
+
+def test_latest_step_empty(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None

@@ -1,0 +1,70 @@
+"""K-means + ARI: recovery of separated clusters, ARI invariances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import adjusted_rand_index, kmeans, kmeans_best_of
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_kmeans_recovers_separated_clusters():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 10, (4, 8))
+    labels_true = np.repeat(np.arange(4), 25)
+    x = centers[labels_true] + rng.normal(0, 0.3, (100, 8))
+    lab, cen = kmeans_best_of(KEY, jnp.asarray(x), 4, restarts=4)
+    assert adjusted_rand_index(np.asarray(lab), labels_true) == 1.0
+
+
+def test_kmeans_inertia_decreases_with_k():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (60, 5)))
+    def inertia(k):
+        lab, cen = kmeans(KEY, x, k, iters=30)
+        from repro.core.clustering import pairwise_sq_dists
+        return float(jnp.sum(jnp.min(pairwise_sq_dists(x, cen), axis=1)))
+    assert inertia(8) <= inertia(2) + 1e-5
+
+
+def test_ari_identical_is_one():
+    lab = np.array([0, 0, 1, 1, 2, 2])
+    assert adjusted_rand_index(lab, lab) == 1.0
+
+
+def test_ari_permutation_invariant():
+    truth = np.array([0, 0, 1, 1, 2, 2])
+    pred = np.array([2, 2, 0, 0, 1, 1])    # same partition, renamed
+    assert adjusted_rand_index(pred, truth) == 1.0
+
+
+@given(st.lists(st.integers(0, 3), min_size=8, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_ari_symmetric_and_bounded(labels):
+    a = np.array(labels)
+    rng = np.random.default_rng(0)
+    b = rng.integers(0, 4, len(a))
+    ab = adjusted_rand_index(a, b)
+    ba = adjusted_rand_index(b, a)
+    assert ab == pytest.approx(ba, abs=1e-9)
+    assert ab <= 1.0 + 1e-9
+
+
+def test_ari_random_near_zero():
+    rng = np.random.default_rng(0)
+    vals = []
+    for s in range(20):
+        a = rng.integers(0, 5, 200)
+        b = rng.integers(0, 5, 200)
+        vals.append(adjusted_rand_index(a, b))
+    assert abs(np.mean(vals)) < 0.05
+
+
+def test_pallas_kernel_path_matches_jnp_path():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (50, 64)).astype(np.float32))
+    lab1, _ = kmeans(KEY, x, 5, iters=20, use_kernel=False)
+    lab2, _ = kmeans(KEY, x, 5, iters=20, use_kernel=True)
+    assert adjusted_rand_index(np.asarray(lab1), np.asarray(lab2)) == 1.0

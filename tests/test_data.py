@@ -1,0 +1,64 @@
+"""Data substrate: synthetic datasets, non-IID partition, pipelines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (batch_iterator, make_dataset, partition_noniid,
+                        sample_batch)
+from repro.data.pipeline import token_batch_iterator
+
+
+def test_dataset_shapes_and_ranges():
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=500, n_test=100, seed=0)
+    assert X.shape == (500, 28, 28, 1) and Xt.shape == (100, 28, 28, 1)
+    assert X.min() >= 0 and X.max() <= 1
+    assert set(np.unique(y)) <= set(range(10))
+    Xc, yc, _, _ = make_dataset("cifar_syn", n_train=200, n_test=50, seed=0)
+    assert Xc.shape == (200, 32, 32, 3)
+
+
+def test_classes_are_separable_by_nearest_prototype():
+    """The synthetic data must be learnable: nearest-class-mean accuracy
+    well above chance."""
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=2000, n_test=400, seed=1)
+    means = np.stack([X[y == c].mean(0) for c in range(10)])
+    d = ((Xt[:, None] - means[None]) ** 2).sum((2, 3, 4))
+    acc = (d.argmin(1) == yt).mean()
+    assert acc > 0.5, acc
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_partition_properties(seed):
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=800, n_test=50,
+                                seed=seed % 3)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=20, size_range=(30, 60),
+                           majority_frac=0.8, seed=seed)
+    assert fed.n_devices == 20
+    assert np.all(fed.sizes >= 30) and np.all(fed.sizes <= 60)
+    # majority class dominates each device
+    for n in range(20):
+        frac = (fed.y[n] == fed.majority_class[n]).mean()
+        assert frac >= 0.5, (n, frac)
+    # all classes appear as majority roughly evenly
+    counts = np.bincount(fed.majority_class, minlength=10)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_batch_iterator_covers_epoch():
+    X = np.arange(10)[:, None]
+    y = np.arange(10)
+    it = batch_iterator(X, y, 3, seed=0)
+    seen = []
+    for _ in range(4):
+        xb, yb = next(it)
+        seen.extend(yb.tolist())
+    assert sorted(seen[:10]) == list(range(10))
+
+
+def test_token_iterator_shapes():
+    it = token_batch_iterator(vocab=50, batch=4, seq=16, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+    assert b["tokens"].max() < 50

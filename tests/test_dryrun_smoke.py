@@ -1,0 +1,60 @@
+"""Distribution-layer smoke test: lower/compile smoke configs on a small
+multi-device mesh in a SUBPROCESS (device count must be set before jax
+init, so it cannot run in-process with the other tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import InputShape
+from repro.configs.registry import get_smoke_config
+from repro.launch import steps as S
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = {}
+for arch in ("chatglm3-6b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
+             "jamba-1.5-large-398b", "musicgen-medium", "internvl2-26b"):
+    cfg = get_smoke_config(arch)
+    shape = InputShape("smoke_train", 64, 8, "train")
+    with mesh:
+        step, opt = S.make_train_step(cfg, mesh)
+        ps = S.params_struct(cfg, mesh)
+        os_ = S.opt_state_struct(cfg, mesh, opt)
+        batch = S.input_specs(cfg, shape, mesh)
+        compiled = jax.jit(step).lower(ps, os_, batch).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        out[arch + "/train"] = float(cost.get("flops", 0))
+    dshape = InputShape("smoke_decode", 64, 8, "decode")
+    with mesh:
+        serve = S.make_serve_step(cfg, mesh)
+        ps = S.params_struct(cfg, mesh)
+        cache = S.cache_specs_struct(cfg, dshape, mesh)
+        ins = S.input_specs(cfg, dshape, mesh)
+        compiled = jax.jit(serve).lower(ps, cache, ins["tokens"],
+                                        ins["pos"]).compile()
+        out[arch + "/decode"] = 1.0
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_smoke_mesh_lowering():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env,
+        capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert len(out) == 12
+    assert all(v > 0 for v in out.values())

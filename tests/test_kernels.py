@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.hier_agg.ops import weighted_aggregate, aggregate_pytrees
+from repro.kernels.hier_agg.ref import weighted_aggregate_ref
+from repro.kernels.kmeans_dist.ops import pairwise_sq_dists
+from repro.kernels.kmeans_dist.ref import pairwise_sq_dists_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------- kmeans_dist
+
+@pytest.mark.parametrize("N,P,K", [
+    (100, 2540, 10),    # IKC mini-model weights, K=10 clusters
+    (37, 130, 3),       # unaligned everything
+    (256, 512, 128),    # exact tiles
+    (5, 7, 2),          # tiny
+    (300, 1024, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_dist_sweep(N, P, K, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (N, P), dtype)
+    c = jax.random.normal(k2, (K, P), dtype)
+    out = pairwise_sq_dists(x, c, interpret=True)
+    ref = pairwise_sq_dists_ref(x, c)
+    tol = 2e-3 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * float(jnp.max(ref)))
+
+
+def test_kmeans_dist_is_actually_squared_distance():
+    x = jnp.array([[0.0, 0.0], [3.0, 4.0]])
+    c = jnp.array([[0.0, 0.0]])
+    out = pairwise_sq_dists(x, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [[0.0], [25.0]], atol=1e-5)
+
+
+# ------------------------------------------------------------ hier_agg
+
+@pytest.mark.parametrize("M,H,P", [(5, 50, 114383), (1, 3, 17), (8, 128, 4096),
+                                   (5, 100, 2540)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hier_agg_sweep(M, H, P, dtype):
+    k1, k2 = jax.random.split(KEY)
+    w = jax.random.uniform(k1, (M, H), jnp.float32)
+    w = w / w.sum(axis=1, keepdims=True)
+    d = jax.random.normal(k2, (H, P), dtype)
+    out = weighted_aggregate(w, d, interpret=True)
+    ref = weighted_aggregate_ref(w, d)
+    tol = 1e-4 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_hier_agg_pytrees_matches_manual():
+    params = {"a": jax.random.normal(KEY, (4, 3, 5)),
+              "b": jax.random.normal(KEY, (4, 7))}
+    w = jnp.array([[0.25, 0.25, 0.25, 0.25], [1.0, 0.0, 0.0, 0.0]])
+    out = aggregate_pytrees(w, params, interpret=True)
+    np.testing.assert_allclose(np.asarray(out["a"][0]),
+                               np.asarray(params["a"].mean(0)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["b"][1]),
+                               np.asarray(params["b"][0]), atol=1e-5)
+
+
+# ------------------------------------------------------ flash attention
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,d,window", [
+    (1, 128, 4, 2, 64, 0),
+    (2, 256, 4, 4, 32, 0),
+    (1, 256, 8, 2, 64, 96),    # GQA + sliding window
+    (1, 200, 4, 2, 64, 0),     # unaligned seq
+    (1, 128, 2, 1, 80, 50),    # unaligned head dim (pad to 128)
+    (2, 384, 6, 3, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, Hq, Hkv, d, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, d), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, d), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 0.03
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel must agree with the model's XLA attention path end to end."""
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import attn_forward, attn_init
+    cfg = ModelConfig("t", "dense", 2, 64, 4, 2, 128, 97, dtype="float32")
+    params = attn_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 64, 64))
+    out_xla = attn_forward(params, x, cfg, impl="xla")
+    out_pl = attn_forward(params, x, cfg, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_xla),
+                               atol=2e-4, rtol=1e-3)

@@ -1,0 +1,90 @@
+"""Launch-layer unit tests that need no device mesh beyond 1 CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCH_IDS, get_config, get_smoke_config,
+                                    variant_for_shape)
+from repro.launch import steps as S
+from repro.launch.mesh import make_debug_mesh
+
+
+def test_variant_for_shape_swa_rules():
+    long = INPUT_SHAPES["long_500k"]
+    for arch in ARCH_IDS:
+        cfg = variant_for_shape(get_config(arch), long)
+        if cfg.family == "ssm":
+            assert cfg.sliding_window == 0      # constant-state, no SWA
+        else:
+            assert cfg.sliding_window == 8192   # bounded KV state
+    # other shapes never get SWA injected
+    for sn in ("train_4k", "prefill_32k", "decode_32k"):
+        cfg = variant_for_shape(get_config("llama3-405b"), INPUT_SHAPES[sn])
+        assert cfg.sliding_window == 0
+
+
+def test_decode_cache_is_bounded_for_long_500k():
+    from repro.models import transformer as T
+    long = INPUT_SHAPES["long_500k"]
+    cfg = variant_for_shape(get_smoke_config("mistral-large-123b"), long)
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 1, long.seq_len))
+    kv_slots = cache[0]["k"].shape[2]
+    assert kv_slots == 8192                     # rolling SWA cache
+    cfg_ssm = variant_for_shape(get_smoke_config("mamba2-2.7b"), long)
+    cache = jax.eval_shape(lambda: T.init_cache(cfg_ssm, 1, long.seq_len))
+    assert cache[0]["ssm"].shape[-1] == cfg_ssm.ssm.d_state  # O(1) state
+
+
+def test_input_specs_audio_and_vlm():
+    mesh = make_debug_mesh()
+    aud = get_config("musicgen-medium")
+    sp = S.input_specs(aud, INPUT_SHAPES["train_4k"], mesh)
+    assert sp["tokens"].shape == (256, 4096, 4)
+    vlm = get_config("internvl2-26b")
+    sp = S.input_specs(vlm, INPUT_SHAPES["train_4k"], mesh)
+    assert sp["prefix_embeds"].shape == (256, 256, 6144)
+    assert sp["tokens"].shape == (256, 4096 - 256)
+    dec = S.input_specs(aud, INPUT_SHAPES["decode_32k"], mesh)
+    assert dec["tokens"].shape == (128, 1, 4)
+
+
+def test_optimizer_selection_by_size():
+    from repro.optim.optimizers import Optimizer
+    big = S.make_optimizer(get_config("llama3-405b"))
+    small = S.make_optimizer(get_config("chatglm3-6b"))
+    assert isinstance(big, Optimizer) and isinstance(small, Optimizer)
+    p = {"w": jnp.zeros((8, 4))}
+    sb = big.init(p)
+    ss = small.init(p)
+    assert "mom" in sb          # adafactor (factored)
+    assert "m" in ss and "v" in ss  # adam
+
+
+def test_drl_features_db_scale():
+    from repro.core.cost_model import SystemParams, sample_population
+    from repro.drl.train import drl_features
+    sp = SystemParams(n_devices=12, n_edges=3)
+    pop = sample_population(sp, seed=0)
+    f = drl_features(pop)
+    assert f.shape == (12, 6)
+    assert np.isfinite(f).all()
+    assert f.min() >= 0.0 and f.max() <= 1.0
+    # dB scaling must spread the gain columns (raw min-max collapses them)
+    spread = np.median(np.sort(f[:, 0])[1:-1])
+    assert 0.02 < spread < 0.98
+
+
+def test_parse_collectives():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %ag = bf16[2,16,128]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%add
+  %nothing = f32[4]{0} add(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 2 * 16 * 128 * 2
+    assert out["all-reduce"]["bytes"] == 4096.0
+    assert out["all-to-all"]["count"] == 0

@@ -1,0 +1,133 @@
+"""Model substrate: forward/grad per family, decode==forward, SSD oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.models import transformer as T
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name, **kw):
+    base = dict(name=name, family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": _cfg("dense"),
+    "swa": _cfg("swa", sliding_window=5),
+    "moe": _cfg("moe", family="moe", d_ff=96,
+                moe=MoEConfig(4, 2, capacity_factor=8.0)),
+    "ssm": _cfg("ssm", family="ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+                ssm=SSMConfig(d_state=16, head_dim=16, chunk=8)),
+    "hybrid": _cfg("hybrid", family="hybrid", n_layers=4, d_ff=96,
+                   ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+                   hybrid_period=2, hybrid_attn_pos=0,
+                   moe=MoEConfig(4, 2, every=2, capacity_factor=8.0)),
+    "vlm": _cfg("vlm", family="vlm", n_prefix_embeds=8),
+    "audio": _cfg("audio", family="audio", n_kv_heads=4, vocab_size=33,
+                  n_codebooks=4),
+}
+
+
+def _batch(cfg, batch=2, seq=16):
+    shape = (batch, seq) if cfg.n_codebooks == 1 else (batch, seq, cfg.n_codebooks)
+    tok = jax.random.randint(KEY, shape, 0, cfg.vocab_size)
+    b = {"tokens": tok, "labels": tok}
+    if cfg.n_prefix_embeds:
+        b["prefix_embeds"] = jax.random.normal(
+            KEY, (batch, cfg.n_prefix_embeds, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_forward_and_grad(fam):
+    cfg = FAMILIES[fam]
+    params = T.init(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux = T.forward(params, batch, cfg)
+    exp_v = cfg.vocab_size
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (2, 16, cfg.n_codebooks, exp_v)
+    else:
+        assert logits.shape == (2, 16, exp_v)
+    assert not bool(jnp.isnan(logits).any())
+    (loss, metrics), grads = jax.value_and_grad(T.loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert jnp.isfinite(loss)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("fam", ["dense", "swa", "ssm", "hybrid", "audio"])
+def test_decode_matches_forward(fam):
+    cfg = FAMILIES[fam]
+    seq = 8
+    params = T.init(KEY, cfg)
+    shape = (2, seq) if cfg.n_codebooks == 1 else (2, seq, cfg.n_codebooks)
+    tok = jax.random.randint(KEY, shape, 0, cfg.vocab_size)
+    full, _ = T.forward(params, {"tokens": tok}, cfg)
+    cache = T.init_cache(cfg, 2, max_len=seq)
+    outs = []
+    for t in range(seq):
+        lg, cache = T.decode(params, tok[:, t:t + 1], cache, jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert jnp.allclose(dec, full, atol=5e-4), float(jnp.max(jnp.abs(dec - full)))
+
+
+def test_swa_cache_is_rolling():
+    cfg = FAMILIES["swa"]
+    cache = T.init_cache(cfg, 2, max_len=100)
+    # window 5 -> 5 slots regardless of max_len
+    assert cache[0]["k"].shape[2] == 5
+
+
+def test_ssd_chunked_matches_reference():
+    k = jax.random.PRNGKey(1)
+    B, S, H, P, N, G = 2, 64, 4, 8, 16, 1
+    ks = jax.random.split(k, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (B, S, G, N))
+    C_ = jax.random.normal(ks[0], (B, S, G, N))
+    for chunk in (8, 16, 64):
+        y1 = ssd_chunked(x, dt, A, B_, C_, chunk)
+        y2 = ssd_reference(x, dt, A, B_, C_)
+        assert jnp.allclose(y1, y2, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor=tiny, most tokens must be dropped (output ~0);
+    with huge factor, outputs differ."""
+    from repro.models import moe as moe_lib
+    cfg_tight = _cfg("m", family="moe", d_ff=32,
+                     moe=MoEConfig(4, 1, capacity_factor=0.01))
+    cfg_loose = _cfg("m", family="moe", d_ff=32,
+                     moe=MoEConfig(4, 1, capacity_factor=8.0))
+    x = jax.random.normal(KEY, (2, 32, 64))
+    p = moe_lib.moe_init(KEY, cfg_tight)
+    out_t, _ = moe_lib.moe_apply(p, x, cfg_tight)
+    out_l, _ = moe_lib.moe_apply(p, x, cfg_loose)
+    # tight capacity zeroes most token outputs
+    frac_zero_t = float(jnp.mean(jnp.all(out_t == 0, axis=-1)))
+    frac_zero_l = float(jnp.mean(jnp.all(out_l == 0, axis=-1)))
+    assert frac_zero_t > 0.5
+    assert frac_zero_l == 0.0
+
+
+def test_moe_aux_loss_balanced_router_is_one():
+    """Perfectly uniform router -> aux loss == 1 (Switch normalisation)."""
+    from repro.models import moe as moe_lib
+    cfg = _cfg("m", family="moe", d_ff=32, moe=MoEConfig(4, 1))
+    p = moe_lib.moe_init(KEY, cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    x = jax.random.normal(KEY, (2, 64, 64))
+    _, aux = moe_lib.moe_apply(p, x, cfg)
+    # me uniform = 1/E; ce depends on top-1 tie-break -> E * sum(me*ce) == 1
+    assert abs(float(aux) - 1.0) < 1e-5

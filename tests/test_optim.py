@@ -1,0 +1,63 @@
+"""Optimizers: convergence on a quadratic, state shapes, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adam, clip_by_global_norm, sgd
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+
+def _quadratic_target():
+    rng = np.random.default_rng(0)
+    target = {"w": jnp.asarray(rng.normal(0, 1, (8, 4))),
+              "b": jnp.asarray(rng.normal(0, 1, (4,)))}
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+    return params, loss
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+    lambda: adam(0.1), lambda: adafactor(0.3)])
+def test_optimizer_converges(make_opt):
+    params, loss = _quadratic_target()
+    opt = make_opt()
+    st = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        params, st = opt.update(g, st, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0), "b": jnp.full((4,), -10.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+    small = {"a": jnp.full((3,), 0.01), "b": jnp.full((4,), 0.01)}
+    unchanged = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(unchanged["a"]), 0.01, rtol=1e-5)
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "v": jnp.zeros((16,))}
+    st = adafactor(0.01).init(params)
+    assert st["mom"]["w"]["vr"].shape == (64,)
+    assert st["mom"]["w"]["vc"].shape == (32,)
+    assert st["mom"]["v"]["v"].shape == (16,)
+
+
+def test_schedules():
+    c = constant(0.1)
+    assert float(c(jnp.int32(5))) == pytest.approx(0.1)
+    cs = cosine(1.0, 100, final_frac=0.1)
+    assert float(cs(jnp.int32(0))) == pytest.approx(1.0, abs=1e-5)
+    assert float(cs(jnp.int32(100))) == pytest.approx(0.1, abs=1e-5)
+    wc = warmup_cosine(1.0, 10, 110)
+    assert float(wc(jnp.int32(0))) == pytest.approx(0.0, abs=1e-6)
+    assert float(wc(jnp.int32(10))) == pytest.approx(1.0, abs=1e-2)

@@ -1,0 +1,96 @@
+"""Scheduling (Algs 3-4): constraints (15e)/(15f), cluster balance, and the
+IKC no-repeat rotation property — with hypothesis over random clusterings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduling import FedAvgScheduler, IKCScheduler, VKCScheduler
+
+
+def _clusters(rng, n, k):
+    c = rng.integers(0, k, n)
+    # ensure every cluster non-empty
+    c[:k] = np.arange(k)
+    return c
+
+
+def test_fedavg_random_size_and_uniqueness():
+    rng = np.random.default_rng(0)
+    s = FedAvgScheduler(100, 30)
+    for _ in range(5):
+        sel = s.schedule(rng)
+        assert len(sel) == 30
+        assert len(set(sel.tolist())) == 30          # (15f): no duplicates
+        assert sel.max() < 100 and sel.min() >= 0    # (15e): subset of N
+
+
+@given(n=st.integers(30, 120), k=st.integers(2, 10), h=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_vkc_properties(n, k, h, seed):
+    rng = np.random.default_rng(seed)
+    clusters = _clusters(rng, n, k)
+    if h * k > n:
+        return
+    s = VKCScheduler(clusters, h)
+    sel = s.schedule(rng)
+    assert len(sel) == h * k
+    assert len(set(sel.tolist())) == len(sel)
+    # each cluster contributes min(h, |C_k|) at least
+    for kk in range(k):
+        got = sum(1 for d in sel if clusters[d] == kk)
+        assert got >= min(h, int((clusters == kk).sum()))
+
+
+@given(n=st.integers(30, 120), k=st.integers(2, 10), h=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_ikc_properties(n, k, h, seed):
+    rng = np.random.default_rng(seed)
+    clusters = _clusters(rng, n, k)
+    if h * k > n:
+        return
+    s = IKCScheduler(clusters, h)
+    for _ in range(6):
+        sel = s.schedule(rng)
+        assert len(sel) == h * k
+        assert len(set(sel.tolist())) == len(sel)
+
+
+def test_ikc_rotates_before_repeating():
+    """Every cluster member must be scheduled once before any member is
+    scheduled twice (the paper's G_k bookkeeping)."""
+    rng = np.random.default_rng(7)
+    k, per, h = 4, 6, 2
+    clusters = np.repeat(np.arange(k), per)          # 4 clusters x 6 devices
+    s = IKCScheduler(clusters, h)
+    counts = np.zeros(len(clusters), int)
+    rounds_to_cover = per // h                       # 3 rounds covers all
+    for _ in range(rounds_to_cover):
+        sel = s.schedule(rng)
+        counts[sel] += 1
+    assert counts.max() == 1 and counts.min() == 1, counts
+
+
+def test_ikc_beats_vkc_on_coverage():
+    """After R rounds, IKC must have touched >= as many unique devices."""
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(1)
+    clusters = np.repeat(np.arange(10), 10)
+    ikc = IKCScheduler(clusters, 2)
+    vkc = VKCScheduler(clusters, 2)
+    seen_i, seen_v = set(), set()
+    for _ in range(4):
+        seen_i.update(ikc.schedule(rng1).tolist())
+        seen_v.update(vkc.schedule(rng2).tolist())
+    assert len(seen_i) >= len(seen_v)
+    assert len(seen_i) == 80                         # 4 rounds x 20, no repeat
+
+
+def test_small_cluster_topup():
+    """Cluster smaller than h: all members scheduled + top-up keeps H."""
+    rng = np.random.default_rng(3)
+    clusters = np.array([0] * 2 + [1] * 28)          # cluster 0 has 2 < h=3
+    s = IKCScheduler(clusters, 3)
+    sel = s.schedule(rng)
+    assert len(sel) == 6
+    assert {0, 1} <= set(sel.tolist())

@@ -1,0 +1,67 @@
+"""End-to-end behaviour of the paper's system (Algorithm 6 framework)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cost_model import SystemParams, sample_population
+from repro.core.framework import FrameworkConfig, HFLFramework
+from repro.data import make_dataset, partition_noniid
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    sp = SystemParams(n_devices=20, n_edges=3)
+    pop = sample_population(sp, seed=0)
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=1200, n_test=300, seed=0)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=20, size_range=(30, 50),
+                           seed=0)
+    return sp, pop, fed
+
+
+@pytest.mark.slow
+def test_framework_round_records_costs(small_world):
+    sp, pop, fed = small_world
+    cfg = FrameworkConfig(scheduler="ikc", assigner="geo", H=10, K=10,
+                          target_acc=0.99, max_iters=2, alloc_steps=80,
+                          seed=0)
+    fw = HFLFramework(sp, pop, fed, cfg)
+    # clustering quality on the synthetic non-IID split must be high
+    assert fw.clustering_stats["ari"] >= 0.6
+    assert fw.clustering_stats["delay_s"] > 0
+    rec = fw.run_round(1)
+    assert rec["T_i"] > 0 and rec["E_i"] > 0
+    assert rec["obj_i"] == pytest.approx(rec["E_i"] + sp.lam * rec["T_i"])
+    assert rec["msg_bits"] == pytest.approx(
+        (sp.Q * 10 + pop.n_edges) * fw.sp.model_bits)
+    assert 0 <= rec["acc"] <= 1
+    s = fw.summary()
+    assert s["iters"] == 1 and s["objective"] > 0
+
+
+@pytest.mark.slow
+def test_scheduler_variants_construct(small_world):
+    sp, pop, fed = small_world
+    for sched in ("fedavg", "vkc"):
+        cfg = FrameworkConfig(scheduler=sched, assigner="geo", H=10, K=10,
+                              max_iters=1, alloc_steps=60, seed=1)
+        fw = HFLFramework(sp, pop, fed, cfg)
+        sel = fw.scheduler.schedule(np.random.default_rng(0))
+        assert len(sel) == 10
+        assert len(set(sel.tolist())) == 10
+
+
+@pytest.mark.slow
+def test_ikc_clustering_cheaper_than_vkc(small_world):
+    """Table II: IKC's mini-model clustering must cost far less time and
+    energy than VKC's full-model clustering."""
+    sp, pop, fed = small_world
+    f_ikc = HFLFramework(sp, pop, fed, FrameworkConfig(
+        scheduler="ikc", assigner="geo", H=10, max_iters=1, seed=2))
+    f_vkc = HFLFramework(sp, pop, fed, FrameworkConfig(
+        scheduler="vkc", assigner="geo", H=10, max_iters=1, seed=2))
+    assert (f_ikc.clustering_stats["energy_j"]
+            < 0.25 * f_vkc.clustering_stats["energy_j"])
+    assert (f_ikc.clustering_stats["delay_s"]
+            < 0.25 * f_vkc.clustering_stats["delay_s"])
+    assert f_ikc.clustering_stats["ari"] >= 0.6
+    assert f_vkc.clustering_stats["ari"] >= 0.6
