@@ -1,0 +1,149 @@
+"""Micro-benchmark: sequential per-edge round vs the fused round engine.
+
+Measures, at the acceptance scale (M=10 edges, H=50 devices, CPU):
+  * the seed's sequential path — M separate ``allocate`` jit calls with
+    per-edge host round-trips, then ``round_cost`` and Algorithm-1
+    training as separate dispatches;
+  * the fused ``round_step`` — one jitted program for the whole round;
+  * the allocation stage alone (per-edge loop vs ``allocate_all_edges``).
+
+Emits CSV lines (benchmarks.common.emit) and writes
+``BENCH_round_engine.json`` so future PRs can track the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_round_engine
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cost_model as cm
+from repro.core import resource as ra
+from repro.core.framework import round_step
+from repro.core.hfl import hfl_global_iteration
+
+M_EDGES = 10
+H_DEVICES = 50
+ALLOC_STEPS = 300
+REPEAT = 5
+
+
+def _linear_apply(params, X):
+    return X.reshape(X.shape[0], -1) @ params["w"]
+
+
+def _world(seed: int = 0):
+    sp = cm.SystemParams(n_devices=H_DEVICES, n_edges=M_EDGES)
+    pop = cm.sample_population(sp, seed=seed)
+    rng = np.random.default_rng(seed)
+    sched = np.arange(H_DEVICES)
+    assign = rng.integers(0, M_EDGES, H_DEVICES)
+    Dmax = 8
+    X = jnp.asarray(rng.normal(0, 1, (H_DEVICES, Dmax, 2, 2, 1))
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, (H_DEVICES, Dmax)).astype(np.int32))
+    mask = jnp.ones((H_DEVICES, Dmax), jnp.float32)
+    w0 = {"w": jnp.asarray(rng.normal(0, 0.1, (4, 3)).astype(np.float32))}
+    return sp, pop, sched, assign, X, y, mask, w0
+
+
+def sequential_alloc(sp, pop, sched, assign):
+    """Seed-style per-edge loop with host round-trips."""
+    H = len(sched)
+    b = np.zeros(H)
+    f = np.zeros(H)
+    for m in range(pop.n_edges):
+        mask = jnp.asarray(assign == m)
+        res = ra.allocate(sp, pop.u[sched], pop.D[sched], pop.p[sched],
+                          pop.g[sched, m], pop.B_m[m], mask,
+                          steps=ALLOC_STEPS)
+        sel = assign == m
+        b[sel] = np.asarray(res.b)[sel]
+        f[sel] = np.asarray(res.f)[sel]
+    return b, f
+
+
+def sequential_round(sp, pop, sched, assign, X, y, mask, w0):
+    b, f = sequential_alloc(sp, pop, sched, assign)
+    T_i, E_i, _, _ = cm.round_cost(sp, pop, jnp.asarray(sched),
+                                   jnp.asarray(assign), jnp.asarray(b),
+                                   jnp.asarray(f))
+    w = hfl_global_iteration(_linear_apply, w0, X, y, mask, pop.D[sched],
+                             jnp.asarray(assign), M=pop.n_edges, L=sp.L,
+                             Q=sp.Q, lr=0.05)
+    jax.block_until_ready((w, T_i, E_i))
+    return float(T_i), float(E_i)
+
+
+def fused_round(sp, pop, sched, assign, X, y, mask, w0):
+    w, (T_i, E_i, _, _, _, _) = round_step(
+        _linear_apply, sp, w0, pop.u[sched], pop.D[sched], pop.p[sched],
+        pop.g[sched], pop.g_cloud, pop.B_m, X, y, mask, pop.D[sched],
+        jnp.asarray(assign), 0.05, M=pop.n_edges, L=sp.L, Q=sp.Q,
+        alloc_steps=ALLOC_STEPS)
+    jax.block_until_ready((w, T_i, E_i))
+    return float(T_i), float(E_i)
+
+
+def _time(fn, *args, repeat: int = REPEAT):
+    fn(*args)                                        # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def run(out_json: str = "BENCH_round_engine.json"):
+    sp, pop, sched, assign, X, y, mask, w0 = _world()
+
+    # --- allocation stage only
+    _, t_seq_alloc = _time(lambda: sequential_alloc(sp, pop, sched, assign))
+    _, t_fus_alloc = _time(lambda: jax.block_until_ready(
+        ra.allocate_all_edges(sp, pop, sched, assign, steps=ALLOC_STEPS)))
+
+    # --- full round
+    (T_seq, E_seq), t_seq_round = _time(
+        lambda: sequential_round(sp, pop, sched, assign, X, y, mask, w0))
+    (T_fus, E_fus), t_fus_round = _time(
+        lambda: fused_round(sp, pop, sched, assign, X, y, mask, w0))
+
+    assert abs(T_seq - T_fus) / T_seq < 1e-4, (T_seq, T_fus)
+    assert abs(E_seq - E_fus) / E_seq < 1e-4, (E_seq, E_fus)
+
+    result = {
+        "M": M_EDGES, "H": H_DEVICES, "alloc_steps": ALLOC_STEPS,
+        "repeat": REPEAT,
+        "sequential_alloc_ms": t_seq_alloc * 1e3,
+        "fused_alloc_ms": t_fus_alloc * 1e3,
+        "alloc_speedup": t_seq_alloc / t_fus_alloc,
+        "sequential_round_ms": t_seq_round * 1e3,
+        "fused_round_ms": t_fus_round * 1e3,
+        "round_speedup": t_seq_round / t_fus_round,
+        "fused_allocations_per_s": M_EDGES / t_fus_alloc,
+    }
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+
+    emit("round_engine/alloc_sequential", t_seq_alloc * 1e6,
+         f"M={M_EDGES};H={H_DEVICES}")
+    emit("round_engine/alloc_fused", t_fus_alloc * 1e6,
+         f"speedup={result['alloc_speedup']:.1f}x;"
+         f"allocs_per_s={result['fused_allocations_per_s']:.0f}")
+    emit("round_engine/round_sequential", t_seq_round * 1e6,
+         f"T_i={T_seq:.2f};E_i={E_seq:.2f}")
+    emit("round_engine/round_fused", t_fus_round * 1e6,
+         f"speedup={result['round_speedup']:.1f}x")
+    emit("round_engine/claim_fused_3x", 0.0,
+         f"pass={result['round_speedup'] >= 3.0};"
+         f"round={result['round_speedup']:.1f}x;"
+         f"alloc={result['alloc_speedup']:.1f}x")
+    return result
+
+
+if __name__ == "__main__":
+    run()

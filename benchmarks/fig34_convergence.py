@@ -1,73 +1,46 @@
 """Figs. 3/4: testing accuracy vs global iteration for IKC / VKC / FedAvg
-at several cohort sizes H (reduced scale; orderings are the claim)."""
+at several cohort sizes H (reduced scale; orderings are the claim).
+
+All repeats of a cell run through ONE vmapped ``SweepRunner`` engine
+(the repeat axis is a vmap lane), instead of re-running the framework
+per repeat: every round of every repeat is a single jitted dispatch.
+Semantics match the original figure: fixed round-robin edge assignment
+(``assign="mod"``), aggregation weighted by the actual federated
+partition sizes (``sizes="fed"``), and no resource allocation
+(``train_only=True`` — this figure only reads accuracy curves).
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import REPEATS, emit, make_world
-from repro.core.hfl import (evaluate_in_batches, hfl_global_iteration,
-                            pad_device_data)
-from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
-                                   VKCScheduler, run_device_clustering)
-from repro.models import cnn
-
-
-def _train_curve(fed, sp, scheduler, iters: int, lr: float, seed: int):
-    X, y, mask = pad_device_data(fed)
-    key = jax.random.PRNGKey(seed)
-    params = cnn.cnn_init(key, fed.X_test.shape[1:3], fed.X_test.shape[3])
-    rng = np.random.default_rng(seed)
-    accs = []
-    for i in range(iters):
-        sched = np.asarray(scheduler.schedule(rng))
-        assign = np.asarray(sched % sp.n_edges)      # fixed assignment here
-        params = hfl_global_iteration(
-            cnn.cnn_apply, params, X[sched], y[sched], mask[sched],
-            jnp.asarray(fed.sizes[sched], jnp.float32), jnp.asarray(assign),
-            M=sp.n_edges, L=sp.L, Q=sp.Q, lr=lr)
-        accs.append(evaluate_in_batches(cnn.cnn_apply, params,
-                                        fed.X_test, fed.y_test))
-    return accs
-
-
-def _make_scheduler(name, fed, sp, H, seed):
-    if name == "fedavg":
-        return FedAvgScheduler(fed.n_devices, H)
-    key = jax.random.PRNGKey(seed)
-    X, y, mask = pad_device_data(fed)
-    if name == "ikc":
-        mini = cnn.mini_init(key)
-        crop = jax.vmap(cnn.mini_preprocess)(
-            X[:, :, :, :, :1], jax.random.split(key, fed.n_devices))
-        labels, _ = run_device_clustering(key, cnn.mini_apply, mini, crop,
-                                          y, mask, 10, sp.L, 0.01)
-        return IKCScheduler(labels, max(1, H // 10))
-    full = cnn.cnn_init(key, fed.X_test.shape[1:3], fed.X_test.shape[3])
-    labels, _ = run_device_clustering(key, cnn.cnn_apply, full, X, y, mask,
-                                      10, sp.L, 0.01)
-    return VKCScheduler(labels, max(1, H // 10))
+from repro.core.sweep import SweepRunner, build_scheduler
 
 
 def run(iters: int = 10, h_values=(10, 20), out_json="results/fig34.json"):
+    built = [make_world("fmnist_syn", seed=r) for r in range(REPEATS)]
+    sp = built[0][0]
+    worlds = [(pop, fed) for _, pop, fed in built]
+    runner = SweepRunner(sp, worlds, lr=0.03, alloc_steps=30, model_seed=0)
+
     results = {}
     for H in h_values:
         for method in ("ikc", "vkc", "fedavg"):
-            curves = []
-            for r in range(REPEATS):
-                sp, pop, fed = make_world("fmnist_syn", seed=r)
-                t0 = time.perf_counter()
-                sched = _make_scheduler(method, fed, sp, H, seed=r)
-                accs = _train_curve(fed, sp, sched, iters, lr=0.03, seed=r)
-                curves.append(accs)
-            mean = np.mean(curves, axis=0)
+            t0 = time.perf_counter()
+            scheds = [build_scheduler(method, worlds[r][1], sp, H, K=10,
+                                      lr=0.01, seed=r)
+                      for r in range(REPEATS)]
+            out = runner.run(scheds, n_rounds=iters, assign="mod",
+                             seeds=list(range(REPEATS)), sizes="fed",
+                             train_only=True)
+            curves = out["acc"]                      # (REPEATS, iters)
+            mean = curves.mean(axis=0)
             results[f"{method}_H{H}"] = {"mean": mean.tolist(),
-                                         "std": np.std(curves, 0).tolist()}
+                                         "std": curves.std(axis=0).tolist()}
             emit(f"fig34/{method}_H{H}",
                  (time.perf_counter() - t0) * 1e6,
                  f"final_acc={mean[-1]:.3f};auc={float(np.mean(mean)):.3f}")

@@ -16,7 +16,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table2|fig34|fig5|fig6|fig7|kernels|roofline")
+                    help="table2|fig34|fig5|fig6|fig7|kernels|roofline|engine")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     args = ap.parse_args()
@@ -54,6 +54,9 @@ def main() -> None:
         if want("roofline"):
             from benchmarks import roofline
             roofline.run()
+        if want("engine"):
+            from benchmarks import bench_round_engine
+            bench_round_engine.run()
     except Exception:  # noqa: BLE001
         traceback.print_exc()
         print("benchmark_suite,0.0,FAILED", flush=True)

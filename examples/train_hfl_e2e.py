@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--episodes", type=int, default=80,
                     help="D3QN pre-training episodes (Algorithm 5)")
     ap.add_argument("--H", type=int, default=20)
+    ap.add_argument("--engine", choices=("fused", "sequential"),
+                    default="fused",
+                    help="fused batched round engine (default) or the "
+                         "per-edge sequential oracle")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -49,7 +53,7 @@ def main():
             ("baseline(FedAvg+geo)", "fedavg", "geo", None)):
         cfg = FrameworkConfig(scheduler=sched, assigner=assign, H=args.H,
                               K=10, target_acc=0.70, max_iters=args.rounds,
-                              seed=0)
+                              seed=0, engine=args.engine)
         fw = HFLFramework(sp, pop, fed, cfg, drl_params=drl)
         print(f"[{time.time()-t0:5.1f}s] running {name}")
         results[name] = fw.run(verbose=True)

@@ -10,11 +10,17 @@ objective (17):
 where per-edge (T_m, E_m) come from the convex resource allocator
 (problem 27) plus the constant cloud terms. The benchmark variants
 HFEL-100/HFEL-300 bound the number of exchange trials as in §VI-B.
+
+All allocator calls go through the batched ``allocate_batch`` solver:
+full-pattern evaluations solve all M edges in one vmapped jit call, and
+each transfer/exchange trial re-solves its two affected edges in one
+call — the search runs thousands of allocations per assignment, so this
+is the HFEL hot path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,30 +29,36 @@ from repro.core import cost_model as cm
 from repro.core import resource as ra
 
 
-def _edge_eval(sp, feats, assign, m, B_m, alloc_steps):
-    """Resource-allocate edge m. feats: dict of (H,) arrays; returns
-    (T_m, E_m) including cloud constants=0 here (added in total)."""
-    mask = jnp.asarray(assign == m)
-    res = ra.allocate(sp, feats["u"], feats["D"], feats["p"],
-                      feats["g"][:, m], B_m, mask, steps=alloc_steps)
-    return float(res.T_edge), float(res.E_edge)
+def _edges_eval(sp, feats, assign, edges: Sequence[int], B,
+                alloc_steps: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Resource-allocate a subset of edges in ONE batched jit call.
+
+    feats: dict of (H,)/(H, M) cohort arrays; edges: edge ids to solve.
+    Returns (T, E) arrays of shape (len(edges),) excluding cloud
+    constants (added by callers)."""
+    edges = np.asarray(edges)
+    k = len(edges)
+    H = feats["u"].shape[0]
+    masks = jnp.asarray(np.asarray(assign)[None, :] == edges[:, None])
+    res = ra.allocate_batch(
+        sp,
+        jnp.broadcast_to(feats["u"], (k, H)),
+        jnp.broadcast_to(feats["D"], (k, H)),
+        jnp.broadcast_to(feats["p"], (k, H)),
+        feats["g"][:, edges].T, jnp.asarray(B)[edges], masks,
+        steps=alloc_steps)
+    return np.asarray(res.T_edge), np.asarray(res.E_edge)
 
 
 def total_objective(sp: cm.SystemParams, pop: cm.Population, sched_idx,
                     assign, alloc_steps: int = 200
                     ) -> Tuple[float, np.ndarray, np.ndarray]:
     """J(Ψ) for a full assignment; returns (J, T_m array, E_m array)."""
-    feats = {"u": pop.u[sched_idx], "D": pop.D[sched_idx],
-             "p": pop.p[sched_idx], "g": pop.g[sched_idx]}
-    M = pop.n_edges
-    T = np.zeros(M)
-    E = np.zeros(M)
-    for m in range(M):
-        T[m], E[m] = _edge_eval(sp, feats, np.asarray(assign), m,
-                                float(pop.B_m[m]), alloc_steps)
+    res = ra.allocate_all_edges(sp, pop, sched_idx, assign,
+                                steps=alloc_steps)
     T_cl, E_cl = cm.cloud_cost(sp, pop.g_cloud)
-    T_m = T + np.asarray(T_cl)
-    E_m = E + np.asarray(E_cl)
+    T_m = np.asarray(res.T_edge) + np.asarray(T_cl)
+    E_m = np.asarray(res.E_edge) + np.asarray(E_cl)
     return float(E_m.sum() + sp.lam * T_m.max()), T_m, E_m
 
 
@@ -75,12 +87,9 @@ class HFELAssigner:
         else:
             assign = np.asarray(init_assign).copy()
 
-        # per-edge cached terms
-        T = np.zeros(M)
-        E = np.zeros(M)
-        for m in range(M):
-            T[m], E[m] = _edge_eval(self.sp, feats, assign, m, B[m],
-                                    self.alloc_steps)
+        # per-edge cached terms — all M edges in one batched solve
+        T, E = _edges_eval(self.sp, feats, assign, np.arange(M), B,
+                           self.alloc_steps)
 
         def obj(Tv, Ev):
             return (Ev + E_cl).sum() + self.sp.lam * (Tv + T_cl).max()
@@ -90,9 +99,9 @@ class HFELAssigner:
         def try_move(new_assign, edges):
             nonlocal cur, assign, T, E
             T2, E2 = T.copy(), E.copy()
-            for m in edges:
-                T2[m], E2[m] = _edge_eval(self.sp, feats, new_assign, m,
-                                          B[m], self.alloc_steps)
+            edges = list(edges)
+            T2[edges], E2[edges] = _edges_eval(self.sp, feats, new_assign,
+                                               edges, B, self.alloc_steps)
             new = obj(T2, E2)
             if new < cur - 1e-9:
                 assign, T, E, cur = new_assign, T2, E2, new

@@ -163,6 +163,26 @@ def cloud_cost(sp: SystemParams, g_cloud_m, model_bits=None):
 
 # ------------------------------------------------------ eqs (13)-(14)
 
+def round_cost_gathered(sp: SystemParams, u, D, p, g_sel, g_cloud, assign,
+                        b, f, M: int, model_bits=None):
+    """(13)/(14) from pre-gathered cohort arrays — traceable core.
+
+    u, D, p, g_sel, b, f: (H,) for the scheduled cohort, with g_sel the
+    gain of each device to its *assigned* edge; assign: (H,) edge ids;
+    g_cloud: (M,). M must be static under jit (one-hot width).
+    Returns (T_i, E_i, T_m, E_m).
+    """
+    tc = t_cmp(sp, u, D, f) + t_com(sp, b, g_sel, p, model_bits)
+    ec = e_cmp(sp, u, D, f) + e_com(sp, b, g_sel, p, model_bits)
+    onehot = jax.nn.one_hot(assign, M, dtype=tc.dtype)         # (H, M)
+    T_edge = sp.Q * jnp.max(onehot * tc[:, None], axis=0)       # (M,)
+    E_edge = sp.Q * jnp.sum(onehot * ec[:, None], axis=0)
+    T_cl, E_cl = cloud_cost(sp, g_cloud, model_bits)
+    T_m = T_cl + T_edge
+    E_m = E_cl + E_edge
+    return jnp.max(T_m), jnp.sum(E_m), T_m, E_m
+
+
 def round_cost(sp: SystemParams, pop: Population, sched_idx, assign,
                b, f, model_bits=None):
     """One global iteration's (T_i, E_i, per-edge T_m, per-edge E_m).
@@ -172,16 +192,8 @@ def round_cost(sp: SystemParams, pop: Population, sched_idx, assign,
     """
     u, D, p = pop.u[sched_idx], pop.D[sched_idx], pop.p[sched_idx]
     g = pop.g[sched_idx, assign]
-    tc = t_cmp(sp, u, D, f) + t_com(sp, b, g, p, model_bits)
-    ec = e_cmp(sp, u, D, f) + e_com(sp, b, g, p, model_bits)
-    M = pop.n_edges
-    onehot = jax.nn.one_hot(assign, M, dtype=tc.dtype)         # (H, M)
-    T_edge = sp.Q * jnp.max(onehot * tc[:, None], axis=0)       # (M,)
-    E_edge = sp.Q * jnp.sum(onehot * ec[:, None], axis=0)
-    T_cl, E_cl = cloud_cost(sp, pop.g_cloud, model_bits)
-    T_m = T_cl + T_edge
-    E_m = E_cl + E_edge
-    return jnp.max(T_m), jnp.sum(E_m), T_m, E_m
+    return round_cost_gathered(sp, u, D, p, g, pop.g_cloud, assign, b, f,
+                               pop.n_edges, model_bits)
 
 
 def objective(sp: SystemParams, T_i, E_i):

@@ -7,6 +7,13 @@ Per global iteration i:
   4. HFL training (Algorithm 1) on the scheduled cohort,
   5. evaluate; stop when the target accuracy is reached.
 
+Steps 3+4 plus the cost bookkeeping (13)/(14) run through the fused
+``round_step`` engine: assignment one-hot construction, the vmapped
+all-edges resource allocation, ``round_cost`` and the Algorithm-1
+training are one jitted program, so a round costs ONE device dispatch +
+host sync instead of ~M+3 (the old per-edge Python loop is kept as
+``engine="sequential"`` — the parity oracle for tests).
+
 Tracks the paper's reported quantities: accuracy trajectory, T (13),
 E (14), objective E + λT (15), and transmitted message volume per round
 and cumulative (Fig. 7f/7g), plus the one-off clustering cost (Table II).
@@ -14,6 +21,7 @@ and cumulative (Fig. 7f/7g), plus the one-off clustering cost (Table II).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -25,13 +33,52 @@ from repro.core import cost_model as cm
 from repro.core import resource as ra
 from repro.core.clustering import adjusted_rand_index
 from repro.core.hfl import (evaluate_in_batches, hfl_global_iteration,
-                            pad_device_data)
+                            hfl_global_iteration_core, pad_device_data)
 from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
                                    VKCScheduler, run_device_clustering)
 from repro.core.scheduling.device_clustering import clustering_cost
 from repro.data.partition import FederatedData
 from repro.models import cnn
 from repro.utils import tree_bytes
+
+
+def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
+                    g_cloud, B_m, X, y, mask, sizes, assign, lr, *,
+                    M: int, L: int, Q: int, alloc_steps: int):
+    """Traceable fused round: one global iteration minus scheduling.
+
+    Inputs are pre-gathered for the scheduled cohort: u/D/p/sizes (H,),
+    g (H, M) gains to every edge, X/y/mask (H, Dmax, ...), assign (H,).
+    Fuses (a) per-edge one-hot/mask construction, (b) the vmapped
+    all-edges resource allocation (27), (c) round costs (13)/(14) and
+    (d) Algorithm-1 training into one program. Returns
+    (new_params, (T_i, E_i, T_m, E_m, b, f)).
+    """
+    H = assign.shape[0]
+    edge_mask = assign[None, :] == jnp.arange(M)[:, None]       # (M, H)
+    res = ra.allocate_batch(
+        sp,
+        jnp.broadcast_to(u, (M, H)), jnp.broadcast_to(D, (M, H)),
+        jnp.broadcast_to(p, (M, H)), g.T, B_m, edge_mask,
+        steps=alloc_steps)
+    b, f = ra.select_device_allocation(res, assign)             # (H,) each
+    g_sel = g[jnp.arange(H), assign]
+    T_i, E_i, T_m, E_m = cm.round_cost_gathered(
+        sp, u, D, p, g_sel, g_cloud, assign, b, f, M)
+    new_params = hfl_global_iteration_core(
+        apply_fn, params, X, y, mask, sizes, assign, M=M, L=L, Q=Q, lr=lr)
+    return new_params, (T_i, E_i, T_m, E_m, b, f)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps"))
+def round_step(apply_fn, sp: cm.SystemParams, params, u, D, p, g, g_cloud,
+               B_m, X, y, mask, sizes, assign, lr, *, M: int, L: int,
+               Q: int, alloc_steps: int):
+    """Jitted fused round — see ``round_step_core``."""
+    return round_step_core(apply_fn, sp, params, u, D, p, g, g_cloud, B_m,
+                           X, y, mask, sizes, assign, lr,
+                           M=M, L=L, Q=Q, alloc_steps=alloc_steps)
 
 
 @dataclasses.dataclass
@@ -46,6 +93,7 @@ class FrameworkConfig:
     alloc_steps: int = 200
     seed: int = 0
     use_kernel: bool = False        # Pallas kmeans kernel (interpret on CPU)
+    engine: str = "fused"           # fused | sequential (per-edge oracle)
 
 
 class HFLFramework:
@@ -73,6 +121,9 @@ class HFLFramework:
     # ------------------------------------------------------------ setup
 
     def _setup_scheduler(self, k_mini, k_cluster):
+        # mirrored by core/sweep.py build_scheduler (standalone, different
+        # key derivation, no cost/ARI bookkeeping) — keep the clustering
+        # recipe in sync with it
         cfg, fed = self.cfg, self.fed
         h = max(1, cfg.H // cfg.K)
         if cfg.scheduler == "fedavg":
@@ -128,8 +179,36 @@ class HFLFramework:
         assign, _ = self.assigner.assign(pop, sched, self.rng)
         assign = np.asarray(assign)
         assign_latency = time.perf_counter() - t0
+        H = len(sched)
 
-        # per-edge resource allocation (problem 27)
+        if self.cfg.engine == "sequential":
+            T_i, E_i = self._sequential_alloc_cost_train(sched, assign)
+        else:
+            self.model_params, (T_i, E_i, _, _, _, _) = round_step(
+                self.apply_fn, sp, self.model_params,
+                pop.u[sched], pop.D[sched], pop.p[sched], pop.g[sched],
+                pop.g_cloud, pop.B_m,
+                self.X[sched], self.y[sched], self.mask[sched],
+                pop.D[sched], jnp.asarray(assign), self.cfg.lr,
+                M=pop.n_edges, L=sp.L, Q=sp.Q,
+                alloc_steps=self.cfg.alloc_steps)
+
+        acc = evaluate_in_batches(self.apply_fn, self.model_params,
+                                  self.fed.X_test, self.fed.y_test)
+        msg_bits = (sp.Q * H + pop.n_edges) * self.sp.model_bits
+        rec = {"iter": i, "acc": acc, "T_i": float(T_i), "E_i": float(E_i),
+               "obj_i": float(E_i + sp.lam * T_i),
+               "msg_bits": float(msg_bits),
+               "assign_latency_s": assign_latency,
+               "H": H}
+        self.history.append(rec)
+        return rec
+
+    def _sequential_alloc_cost_train(self, sched, assign):
+        """Pre-engine per-edge path: M separate allocate dispatches with
+        host round-trips, then round_cost + Algorithm 1. Kept verbatim as
+        the parity oracle for the fused engine."""
+        sp, pop = self.sp, self.pop
         H = len(sched)
         b = np.zeros(H)
         f = np.zeros(H)
@@ -142,7 +221,7 @@ class HFLFramework:
             b[sel] = np.asarray(res.b)[sel]
             f[sel] = np.asarray(res.f)[sel]
 
-        T_i, E_i, T_m, E_m = cm.round_cost(
+        T_i, E_i, _, _ = cm.round_cost(
             sp, pop, jnp.asarray(sched), jnp.asarray(assign),
             jnp.asarray(b), jnp.asarray(f))
 
@@ -152,17 +231,7 @@ class HFLFramework:
             self.X[sched], self.y[sched], self.mask[sched],
             self.pop.D[sched], jnp.asarray(assign),
             M=pop.n_edges, L=sp.L, Q=sp.Q, lr=self.cfg.lr)
-
-        acc = evaluate_in_batches(self.apply_fn, self.model_params,
-                                  self.fed.X_test, self.fed.y_test)
-        msg_bits = (sp.Q * H + pop.n_edges) * self.sp.model_bits
-        rec = {"iter": i, "acc": acc, "T_i": float(T_i), "E_i": float(E_i),
-               "obj_i": float(E_i + sp.lam * T_i),
-               "msg_bits": float(msg_bits),
-               "assign_latency_s": assign_latency,
-               "H": H}
-        self.history.append(rec)
-        return rec
+        return T_i, E_i
 
     def run(self, verbose: bool = True) -> Dict:
         for i in range(1, self.cfg.max_iters + 1):

@@ -41,12 +41,14 @@ def pad_device_data(fed: FederatedData, Dmax: Optional[int] = None):
     return jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask)
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q"))
-def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
-                         sizes, assign, *, M: int, L: int, Q: int,
-                         lr: float):
-    """Algorithm 1. X/y/mask: (H, Dmax, ...) for the scheduled cohort;
-    sizes: (H,) D_n; assign: (H,) edge ids. Returns new global params."""
+def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
+                              sizes, assign, *, M: int, L: int, Q: int,
+                              lr: float):
+    """Algorithm 1, traceable core (no jit) — inlined by the fused round
+    engine (``framework.round_step``) and vmapped by ``core.sweep``.
+
+    X/y/mask: (H, Dmax, ...) for the scheduled cohort; sizes: (H,) D_n;
+    assign: (H,) edge ids. Returns new global params."""
     H = sizes.shape[0]
     onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)      # (H, M)
     w_dev = sizes.astype(jnp.float32)                          # D_n
@@ -84,6 +86,15 @@ def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
         return (w_cloud @ flat).reshape(e.shape[1:])
 
     return jax.tree.map(cloud_agg, edge_params)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q"))
+def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
+                         sizes, assign, *, M: int, L: int, Q: int,
+                         lr: float):
+    """Jitted Algorithm 1 — see ``hfl_global_iteration_core``."""
+    return hfl_global_iteration_core(apply_fn, global_params, X, y, mask,
+                                     sizes, assign, M=M, L=L, Q=Q, lr=lr)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

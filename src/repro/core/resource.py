@@ -16,7 +16,11 @@ this container, so we solve it natively in JAX:
 
 ``allocate`` is jit-compiled with a fixed device-slot count and a validity
 mask, so HFEL's search and the D3QN reward loop can call it thousands of
-times cheaply (and vmap it across edges).
+times cheaply. ``allocate_batch`` vmaps the same solver over a leading
+edge axis, and ``allocate_all_edges`` gathers a population + schedule into
+the ``(M, n_slots)`` batch so all M per-edge problems are solved in ONE
+jit call — the building block of the fused round engine
+(``repro.core.framework.round_step`` and ``repro.core.sweep``).
 """
 from __future__ import annotations
 
@@ -46,12 +50,14 @@ def _edge_terms(sp: SystemParams, u, D, p, g, b, f, mask):
     return t, e
 
 
-@functools.partial(jax.jit, static_argnames=("sp", "steps"))
-def allocate(sp: SystemParams, u, D, p, g, B_m, mask,
-             steps: int = 300) -> AllocResult:
+def _allocate_impl(sp: SystemParams, u, D, p, g, B_m, mask,
+                   steps: int) -> AllocResult:
     """Solve (27) for one edge. All inputs (n_slots,) + scalar B_m.
 
     mask: bool (n_slots,) — which slots hold real devices.
+
+    Pure traceable body (no jit) so it can be vmapped over an edge axis
+    or inlined into larger fused programs.
     """
     n = u.shape[0]
     any_dev = jnp.any(mask)
@@ -112,6 +118,68 @@ def allocate(sp: SystemParams, u, D, p, g, B_m, mask,
     obj = jnp.where(any_dev, E_edge + sp.lam * T_edge, 0.0)
     return AllocResult(b, f, jnp.where(any_dev, T_edge, 0.0),
                        jnp.where(any_dev, E_edge, 0.0), obj)
+
+
+@functools.partial(jax.jit, static_argnames=("sp", "steps"))
+def allocate(sp: SystemParams, u, D, p, g, B_m, mask,
+             steps: int = 300) -> AllocResult:
+    """Single-edge solve of (27); see ``_allocate_impl``."""
+    return _allocate_impl(sp, u, D, p, g, B_m, mask, steps)
+
+
+@functools.partial(jax.jit, static_argnames=("sp", "steps"))
+def allocate_batch(sp: SystemParams, u, D, p, g, B_m, mask,
+                   steps: int = 300) -> AllocResult:
+    """Solve (27) for a batch of edges in one call.
+
+    u, D, p, g, mask: (M, n_slots); B_m: (M,). Returns an AllocResult
+    whose fields carry the leading edge axis: b, f (M, n_slots);
+    T_edge, E_edge, obj (M,).
+    """
+    return jax.vmap(
+        lambda u_, D_, p_, g_, B_, m_:
+            _allocate_impl(sp, u_, D_, p_, g_, B_, m_, steps)
+    )(u, D, p, g, B_m, mask)
+
+
+def gather_edge_inputs(pop, sched, assign):
+    """Gather the (M, H) per-edge allocation inputs for a scheduled cohort.
+
+    sched: (H,) device indices; assign: (H,) edge id per scheduled device.
+    Returns (u, D, p, g, B_m, mask) ready for ``allocate_batch``: device
+    features broadcast across the edge axis, per-edge gains transposed to
+    (M, H), and mask[m, h] = (assign[h] == m).
+    """
+    sched = jnp.asarray(sched)
+    assign = jnp.asarray(assign)
+    M = pop.n_edges
+    H = sched.shape[0]
+    u = jnp.broadcast_to(pop.u[sched], (M, H))
+    D = jnp.broadcast_to(pop.D[sched], (M, H))
+    p = jnp.broadcast_to(pop.p[sched], (M, H))
+    g = pop.g[sched].T                                  # (M, H)
+    mask = assign[None, :] == jnp.arange(M)[:, None]    # (M, H)
+    return u, D, p, g, pop.B_m, mask
+
+
+def allocate_all_edges(sp: SystemParams, pop, sched, assign,
+                       steps: int = 300) -> AllocResult:
+    """Solve (27) for every edge of a population in ONE jit call.
+
+    Replaces the per-edge Python loop (M separate ``allocate`` dispatches
+    with host round-trips) with a single vmapped solve. Returns the
+    batched AllocResult of ``allocate_batch``.
+    """
+    u, D, p, g, B_m, mask = gather_edge_inputs(pop, sched, assign)
+    return allocate_batch(sp, u, D, p, g, B_m, mask, steps=steps)
+
+
+def select_device_allocation(res: AllocResult, assign):
+    """Scatter a batched AllocResult back to per-device (H,) b and f:
+    device h reads row assign[h] of the (M, H) allocation."""
+    assign = jnp.asarray(assign)
+    h_idx = jnp.arange(assign.shape[0])
+    return res.b[assign, h_idx], res.f[assign, h_idx]
 
 
 def allocate_uniform(sp: SystemParams, u, D, p, g, B_m, mask) -> AllocResult:

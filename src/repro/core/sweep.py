@@ -1,0 +1,311 @@
+"""Batched simulation sweeps over the fused round engine.
+
+The paper's headline experiments (Figs. 3-7, Table II) are grids of
+(scheduler x assigner x scheduling ratio x seed) cells, each a full
+multi-round HFL simulation. Re-running ``HFLFramework`` per cell pays the
+Python/dispatch overhead S times per round; ``SweepRunner`` instead
+stacks S independent worlds (population + federated data) along a
+leading lane axis and vmaps the fused ``round_step`` over it, so every
+round of every lane is ONE jitted dispatch. Scheduling ratios change the
+cohort shape H, so each ratio is its own vmapped program (lanes within a
+ratio share one).
+
+Semantics per lane match ``HFLFramework`` with ``engine="fused"``:
+Algorithm-1 training weighted by the cost-model dataset sizes pop.D,
+all-edges convex resource allocation, and round costs (13)/(14).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.assignment.geo import GeoAssigner
+from repro.core.framework import round_step_core
+from repro.core.hfl import hfl_global_iteration_core, pad_device_data
+from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
+                                   VKCScheduler, run_device_clustering)
+from repro.core.scheduling.schedulers import _topup
+from repro.data.partition import FederatedData
+from repro.models import cnn
+from repro.utils import tree_bytes
+
+
+def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
+                    H: int, K: int = 10, lr: float = 0.01, seed: int = 0,
+                    use_kernel: bool = False,
+                    pop: Optional[cm.Population] = None):
+    """Standalone scheduler construction (shared by benchmarks/sweeps).
+
+    IKC clusters with the mini model ξ on 1x10x10 crops, VKC with the
+    full CNN, FedAvg samples uniformly — mirroring
+    ``HFLFramework._setup_scheduler`` without instantiating the whole
+    framework. NOTE: the framework keeps its own copy because its key
+    derivation and clustering-cost/ARI bookkeeping are part of its
+    seeded record; if the clustering recipe changes, update BOTH.
+
+    With ``pop`` given, returns (scheduler, clustering_stats) where
+    clustering_stats carries the Table-II quantities (ari, delay_s,
+    energy_j, aux_bits; empty dict for FedAvg); otherwise returns just
+    the scheduler.
+    """
+    from repro.core.clustering import adjusted_rand_index
+    from repro.core.scheduling.device_clustering import clustering_cost
+    from repro.utils import tree_bytes as _tb
+
+    if name == "fedavg":
+        sched = FedAvgScheduler(fed.n_devices, H)
+        return (sched, {}) if pop is not None else sched
+    if name not in ("ikc", "vkc"):
+        raise ValueError(f"unknown scheduler {name!r}")
+    key = jax.random.PRNGKey(seed)
+    X, y, mask = pad_device_data(fed)
+    h = max(1, H // K)
+    full_bits = _tb(cnn.cnn_init(key, fed.X_test.shape[1:3],
+                                 fed.X_test.shape[3])) * 8
+    if name == "ikc":
+        mini = cnn.mini_init(key)
+        crop = jax.vmap(cnn.mini_preprocess)(
+            X[:, :, :, :, :1], jax.random.split(key, fed.n_devices))
+        labels, _ = run_device_clustering(key, cnn.mini_apply, mini, crop,
+                                          y, mask, K, sp.L, lr,
+                                          use_kernel=use_kernel)
+        sched = IKCScheduler(labels, h)
+        aux_bits = _tb(mini) * 8
+        compute_scale = aux_bits / max(1, full_bits)
+    else:
+        full = cnn.cnn_init(key, fed.X_test.shape[1:3], fed.X_test.shape[3])
+        labels, _ = run_device_clustering(key, cnn.cnn_apply, full, X, y,
+                                          mask, K, sp.L, lr,
+                                          use_kernel=use_kernel)
+        sched = VKCScheduler(labels, h)
+        aux_bits = full_bits
+        compute_scale = 1.0
+    if pop is None:
+        return sched
+    delay, energy = clustering_cost(sp, pop, aux_bits,
+                                    compute_scale=compute_scale)
+    stats = {"ari": adjusted_rand_index(np.asarray(labels),
+                                        fed.majority_class),
+             "delay_s": delay, "energy_j": energy,
+             "aux_bits": float(aux_bits)}
+    return sched, stats
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only"))
+def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
+                g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
+                assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
+                train_only: bool = False):
+    """One fused round for S lanes at once.
+
+    Population/data arrays carry a leading lane axis (S, ...); sched_b
+    and assign_b are (S, H); sizes_b (S, N) holds the Algorithm-1
+    aggregation weights. Gathers each lane's cohort and vmaps
+    ``round_step_core``, returning (params_b, (T_i, E_i)) with (S,)
+    cost vectors. train_only=True skips resource allocation and cost
+    bookkeeping entirely (accuracy-only sweeps like Fig. 3/4) and
+    returns zero costs.
+    """
+    def one(params, u, D, p, g, g_cloud, B_m, X, y, mask, sizes, sched,
+            assign):
+        if train_only:
+            new_params = hfl_global_iteration_core(
+                apply_fn, params, X[sched], y[sched], mask[sched],
+                sizes[sched], assign, M=M, L=L, Q=Q, lr=lr)
+            zero = jnp.zeros(())
+            return new_params, (zero, zero)
+        new_params, (T_i, E_i, _, _, _, _) = round_step_core(
+            apply_fn, sp, params, u[sched], D[sched], p[sched], g[sched],
+            g_cloud, B_m, X[sched], y[sched], mask[sched], sizes[sched],
+            assign, lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps)
+        return new_params, (T_i, E_i)
+
+    return jax.vmap(one)(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
+                         X_b, y_b, mask_b, sizes_b, sched_b, assign_b)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def _sweep_eval(apply_fn, params_b, Xt_b, yt_b):
+    return jax.vmap(
+        lambda prm, Xt, yt: jnp.mean(
+            (jnp.argmax(apply_fn(prm, Xt), axis=-1) == yt)
+            .astype(jnp.float32))
+    )(params_b, Xt_b, yt_b)
+
+
+def _mod_assign(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
+    """Fixed round-robin assignment (Fig. 3/4 training-only sweeps)."""
+    return np.asarray(sched) % pop.n_edges
+
+
+def _geo_assign(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
+    """Delegates to the canonical GeoAssigner (sp is unused by it)."""
+    return np.asarray(GeoAssigner(None).assign(pop, sched, rng)[0])
+
+
+ASSIGN_FNS: Dict[str, Callable] = {"mod": _mod_assign, "geo": _geo_assign}
+
+
+class SweepRunner:
+    """Vmapped multi-lane driver for the fused round engine.
+
+    worlds: list of (Population, FederatedData), one per sweep lane —
+    identical shapes required (same N devices, M edges, test-set size).
+    Each lane gets its own model init, scheduler state and host RNG; the
+    per-round compute of ALL lanes is a single jitted dispatch.
+    """
+
+    def __init__(self, sp: cm.SystemParams,
+                 worlds: Sequence[Tuple[cm.Population, FederatedData]],
+                 *, lr: float = 0.01, alloc_steps: int = 100,
+                 model_seed: int = 0):
+        assert len(worlds) >= 1
+        self.sp, self.lr, self.alloc_steps = sp, lr, alloc_steps
+        self.pops = [w[0] for w in worlds]
+        self.feds = [w[1] for w in worlds]
+        self.S = len(worlds)
+        self.M = self.pops[0].n_edges
+        self.N = self.feds[0].n_devices
+
+        Dmax = max(int(max(len(y) for y in fed.y)) for fed in self.feds)
+        padded = [pad_device_data(fed, Dmax) for fed in self.feds]
+        self.X_b = jnp.stack([p[0] for p in padded])      # (S, N, Dmax, ...)
+        self.y_b = jnp.stack([p[1] for p in padded])
+        self.mask_b = jnp.stack([p[2] for p in padded])
+        self.Xt_b = jnp.stack([jnp.asarray(f.X_test) for f in self.feds])
+        self.yt_b = jnp.stack([jnp.asarray(f.y_test) for f in self.feds])
+        self.fed_sizes_b = jnp.stack(
+            [jnp.asarray(f.sizes, jnp.float32) for f in self.feds])
+        self.u_b = jnp.stack([p.u for p in self.pops])
+        self.D_b = jnp.stack([p.D for p in self.pops])
+        self.p_b = jnp.stack([p.p for p in self.pops])
+        self.g_b = jnp.stack([p.g for p in self.pops])
+        self.g_cloud_b = jnp.stack([p.g_cloud for p in self.pops])
+        self.B_m_b = jnp.stack([p.B_m for p in self.pops])
+
+        hw = self.feds[0].X_test.shape[1:3]
+        ch = self.feds[0].X_test.shape[3]
+        keys = jax.random.split(jax.random.PRNGKey(model_seed), self.S)
+        inits = [cnn.cnn_init(k, hw, ch, self.feds[0].n_classes)
+                 for k in keys]
+        self.params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+        self.apply_fn = cnn.cnn_apply
+        self.model_bits = tree_bytes(inits[0]) * 8
+
+    # ---------------------------------------------------------------- run
+
+    def run(self, schedulers: Sequence, n_rounds: int,
+            assign: Union[str, Callable] = "geo",
+            seeds: Optional[Sequence[int]] = None,
+            target_acc: Optional[float] = None,
+            sizes: str = "pop", train_only: bool = False) -> Dict:
+        """Run n_rounds of all S lanes; lane s uses schedulers[s].
+
+        assign: "geo" | "mod" | callable(pop, sched, rng) -> (H,) edges.
+        sizes: Algorithm-1 aggregation weights — "pop" (cost-model pop.D,
+        HFLFramework semantics) or "fed" (actual federated partition
+        sizes, the Fig. 3/4 training-curve semantics).
+        train_only=True skips resource allocation / cost bookkeeping
+        (T_i, E_i are zeros).
+        Returns {"acc": (S, R), "T_i": (S, R), "E_i": (S, R),
+        "msg_bits_per_round": float, "iters": (S,) rounds to target_acc
+        (or n_rounds), "obj": (S, R)} as numpy arrays.
+        """
+        assert len(schedulers) == self.S
+        assign_fn = ASSIGN_FNS[assign] if isinstance(assign, str) else assign
+        if sizes not in ("pop", "fed"):
+            raise ValueError(f"sizes must be 'pop' or 'fed', got {sizes!r}")
+        sizes_b = self.D_b if sizes == "pop" else self.fed_sizes_b
+        if seeds is None:
+            seeds = list(range(self.S))
+        rngs = [np.random.default_rng(s) for s in seeds]
+        sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
+
+        params_b = self.params0
+        accs: List[np.ndarray] = []
+        Ts: List[np.ndarray] = []
+        Es: List[np.ndarray] = []
+        H = None
+        for _ in range(n_rounds):
+            scheds = [np.asarray(schedulers[s].schedule(rngs[s]))
+                      for s in range(self.S)]
+            # IKC/VKC lanes can come up short of the nominal cohort when a
+            # lane's clustering left clusters empty (K' < K); top the short
+            # lanes up from their unscheduled pool (Alg. 3/4 lines 12-15)
+            # so every lane shares one (S, H) shape.
+            H = max(len(s) for s in scheds)
+            scheds = [np.asarray(_topup(list(s), self.N, H, rngs[i]))
+                      if len(s) < H else s
+                      for i, s in enumerate(scheds)]
+            assigns = [np.asarray(assign_fn(self.pops[s], scheds[s],
+                                            rngs[s]))
+                       for s in range(self.S)]
+            sched_b = jnp.asarray(np.stack(scheds))
+            assign_b = jnp.asarray(np.stack(assigns))
+            params_b, (T_i, E_i) = sweep_round(
+                self.apply_fn, sp, params_b, self.u_b, self.D_b, self.p_b,
+                self.g_b, self.g_cloud_b, self.B_m_b, self.X_b, self.y_b,
+                self.mask_b, sizes_b, sched_b, assign_b, self.lr,
+                M=self.M, L=sp.L, Q=sp.Q, alloc_steps=self.alloc_steps,
+                train_only=train_only)
+            acc = self._eval(params_b)
+            accs.append(acc)
+            Ts.append(np.asarray(T_i))
+            Es.append(np.asarray(E_i))
+            if target_acc is not None and np.all(acc >= target_acc):
+                break
+
+        acc_a = np.stack(accs, axis=1)                  # (S, R)
+        T_a = np.stack(Ts, axis=1)
+        E_a = np.stack(Es, axis=1)
+        R = acc_a.shape[1]
+        if target_acc is not None:
+            reached = acc_a >= target_acc
+            iters = np.where(reached.any(axis=1),
+                             reached.argmax(axis=1) + 1, R)
+        else:
+            iters = np.full(self.S, R)
+        msg_bits = (sp.Q * H + self.M) * sp.model_bits
+        return {"acc": acc_a, "T_i": T_a, "E_i": E_a,
+                "obj": E_a + sp.lam * T_a, "iters": iters,
+                "msg_bits_per_round": float(msg_bits), "H": H}
+
+    def _eval(self, params_b, batch: int = 512) -> np.ndarray:
+        n = self.Xt_b.shape[1]
+        accs, ns = [], []
+        for i in range(0, n, batch):
+            a = _sweep_eval(self.apply_fn, params_b,
+                            self.Xt_b[:, i:i + batch],
+                            self.yt_b[:, i:i + batch])
+            accs.append(np.asarray(a))
+            ns.append(min(batch, n - i))
+        return np.average(np.stack(accs, axis=0), axis=0, weights=ns)
+
+    # ---------------------------------------------------- ratio sweeps
+
+    def sweep_ratios(self, ratios: Sequence[float], *, scheduler: str,
+                     n_rounds: int, assign: Union[str, Callable] = "geo",
+                     K: int = 10, seeds: Optional[Sequence[int]] = None,
+                     target_acc: Optional[float] = None) -> Dict:
+        """Paper-style scheduling-ratio sweep: H = ratio * N for each
+        ratio in ``ratios`` (e.g. 0.3 / 0.5 / 1.0), each ratio one
+        vmapped multi-lane run. Returns {ratio: run-result}."""
+        if seeds is None:
+            seeds = list(range(self.S))
+        out = {}
+        for r in ratios:
+            H = max(1, int(round(r * self.N)))
+            name = "fedavg" if H >= self.N else scheduler
+            scheds = [build_scheduler(name, self.feds[s], self.sp, H, K=K,
+                                      lr=self.lr, seed=seeds[s])
+                      for s in range(self.S)]
+            out[r] = self.run(scheds, n_rounds, assign=assign, seeds=seeds,
+                              target_acc=target_acc)
+        return out

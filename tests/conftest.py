@@ -18,3 +18,21 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_world():
+    """Cached (SystemParams, Population, FederatedData) — built ONCE per
+    session. The synthetic dataset + non-IID partition cost seconds per
+    build and several integration modules need an identical world, so
+    sharing it keeps tier-1 wall time down. Treat it as read-only."""
+    from repro.core.cost_model import SystemParams, sample_population
+    from repro.data import make_dataset, partition_noniid
+
+    sp = SystemParams(n_devices=20, n_edges=3)
+    pop = sample_population(sp, seed=0)
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=1200, n_test=300,
+                                seed=0)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=20, size_range=(30, 50),
+                           seed=0)
+    return sp, pop, fed

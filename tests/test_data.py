@@ -1,7 +1,7 @@
 """Data substrate: synthetic datasets, non-IID partition, pipelines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (batch_iterator, make_dataset, partition_noniid,
                         sample_batch)

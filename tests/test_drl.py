@@ -57,9 +57,12 @@ def test_replay_episode_sampling():
     assert slots.max() < 5
 
 
+@pytest.mark.slow
 def test_d3qn_learns_fixed_target():
     """On a FIXED population with a fixed target assignment, the agent must
-    learn to imitate it (reward -> positive) within a few hundred updates."""
+    learn to imitate it (reward -> positive) within a few hundred updates.
+
+    ~100 s of serial act/update host loop — slow-marked, run with -m slow."""
     from repro.optim import adam
     from repro.drl.train import _td_loss
     H, F, M = 8, 7, 4

@@ -2,7 +2,7 @@
 IKC no-repeat rotation property — with hypothesis over random clusterings."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduling import FedAvgScheduler, IKCScheduler, VKCScheduler
 

@@ -1,21 +1,10 @@
-"""End-to-end behaviour of the paper's system (Algorithm 6 framework)."""
-import jax
+"""End-to-end behaviour of the paper's system (Algorithm 6 framework).
+
+Uses the session-scoped ``small_world`` fixture from conftest.py."""
 import numpy as np
 import pytest
 
-from repro.core.cost_model import SystemParams, sample_population
 from repro.core.framework import FrameworkConfig, HFLFramework
-from repro.data import make_dataset, partition_noniid
-
-
-@pytest.fixture(scope="module")
-def small_world():
-    sp = SystemParams(n_devices=20, n_edges=3)
-    pop = sample_population(sp, seed=0)
-    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=1200, n_test=300, seed=0)
-    fed = partition_noniid(X, y, Xt, yt, n_devices=20, size_range=(30, 50),
-                           seed=0)
-    return sp, pop, fed
 
 
 @pytest.mark.slow
