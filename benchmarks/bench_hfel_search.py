@@ -1,0 +1,131 @@
+"""Micro-benchmark: serial vs batched K-candidate HFEL search.
+
+Times a full HFEL-300 assignment search (100 transfer + 300 exchange
+trials) under both engines on the same worlds and seeds:
+
+  * ``search="serial"`` — the literature-faithful accept/reject loop,
+    one 2-edge ``allocate_batch`` dispatch per trial;
+  * ``search="batched"`` — rounds of K candidate moves, all affected
+    edges of a round solved in ONE flat ``(K*2, H)`` dispatch, trial
+    re-solves warm-started from the incumbent edge solutions.
+
+Emits CSV lines (benchmarks.common.emit) and writes
+``BENCH_hfel_search.json`` (serial/batched wall-time + objective parity
+at M=10, H=50/100) so future PRs can track the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_hfel_search [--smoke]
+
+``--smoke`` runs tiny shapes with a tiny budget and only asserts the
+benchmark runs end-to-end and emits valid JSON (CI guard, no timing
+claims).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cost_model as cm
+from repro.core.assignment.hfel import HFELAssigner
+
+M_EDGES = 10
+H_VALUES = (50, 100)
+N_TRANSFER = 100
+N_EXCHANGE = 300          # HFEL-300 budget
+ALLOC_STEPS = 100
+N_CANDIDATES = 16
+SEEDS = (0, 1, 2)
+
+
+def _time_engine(assigner, pop, sched, seeds):
+    """Mean wall-time and mean objective over per-seed searches (the
+    first, compile-bearing run is warmup and untimed)."""
+    assigner.assign(pop, sched, np.random.default_rng(99))
+    times, objs = [], []
+    for seed in seeds:
+        t0 = time.perf_counter()
+        _, j = assigner.assign(pop, sched, np.random.default_rng(seed))
+        times.append(time.perf_counter() - t0)
+        objs.append(j)
+    return float(np.mean(times)), float(np.mean(objs))
+
+
+def run(out_json: str = "BENCH_hfel_search.json", m_edges: int = M_EDGES,
+        h_values=H_VALUES, n_transfer: int = N_TRANSFER,
+        n_exchange: int = N_EXCHANGE, alloc_steps: int = ALLOC_STEPS,
+        n_candidates: int = N_CANDIDATES, seeds=SEEDS,
+        check_speedup: bool = True):
+    cases = {}
+    for H in h_values:
+        sp = cm.SystemParams(n_devices=H, n_edges=m_edges)
+        pop = cm.sample_population(sp, seed=0)
+        sched = np.arange(H)
+        common = dict(n_transfer=n_transfer, n_exchange=n_exchange,
+                      alloc_steps=alloc_steps)
+        t_ser, j_ser = _time_engine(
+            HFELAssigner(sp, search="serial", **common), pop, sched, seeds)
+        t_bat, j_bat = _time_engine(
+            HFELAssigner(sp, search="batched", n_candidates=n_candidates,
+                         **common), pop, sched, seeds)
+        case = {
+            "serial_s": t_ser, "batched_s": t_bat,
+            "speedup": t_ser / t_bat,
+            "serial_obj": j_ser, "batched_obj": j_bat,
+            "obj_ratio": j_bat / j_ser,
+        }
+        cases[f"H{H}"] = case
+        emit(f"hfel_search/serial_H{H}", t_ser * 1e6,
+             f"M={m_edges};budget={n_transfer}+{n_exchange};J={j_ser:.1f}")
+        emit(f"hfel_search/batched_H{H}", t_bat * 1e6,
+             f"K={n_candidates};speedup={case['speedup']:.1f}x;"
+             f"J={j_bat:.1f};obj_ratio={case['obj_ratio']:.3f}")
+
+    result = {
+        "M": m_edges, "n_transfer": n_transfer, "n_exchange": n_exchange,
+        "alloc_steps": alloc_steps, "n_candidates": n_candidates,
+        "seeds": list(seeds), "cases": cases,
+    }
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+
+    if check_speedup:
+        big = cases[f"H{max(h_values)}"]
+        emit("hfel_search/claim_batched_3x", 0.0,
+             f"pass={big['speedup'] >= 3.0 and big['obj_ratio'] <= 1.02};"
+             f"speedup={big['speedup']:.1f}x;"
+             f"obj_ratio={big['obj_ratio']:.3f}")
+    return result
+
+
+def run_smoke(out_json: str = "results/BENCH_hfel_search_smoke.json"):
+    """Tiny-shape CI guard: runs end-to-end, validates the emitted JSON."""
+    result = run(out_json=out_json, m_edges=3, h_values=(8,), n_transfer=6,
+                 n_exchange=10, alloc_steps=20, n_candidates=4,
+                 seeds=(0,), check_speedup=False)
+    with open(out_json) as fh:
+        loaded = json.load(fh)
+    assert loaded["cases"]["H8"]["serial_s"] > 0
+    assert loaded["cases"]["H8"]["batched_s"] > 0
+    assert result["M"] == 3
+    emit("hfel_search/smoke", 0.0, "pass=True")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; assert-runs-and-emits-JSON only")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,11 @@ latency: D3QN vs HFEL-100 / HFEL-300 vs geographic.
 Assignment latency is still timed per population (that is the measured
 quantity), but objective evaluation batches ALL populations' per-edge
 resource allocations into one ``allocate_batch`` call per strategy
-(P x M edge problems in a single vmapped jit dispatch).
+(P x M edge problems in a single vmapped jit dispatch). The HFEL
+strategies run the batched K-candidate search engine by default
+(``hfel_search="serial"`` restores the one-trial oracle);
+``benchmarks/bench_hfel_search.py`` tracks the serial-vs-batched
+wall-time gap.
 """
 from __future__ import annotations
 
@@ -51,15 +55,18 @@ def batched_objectives(sp, pops, sched, assigns, alloc_steps: int):
 
 
 def run(trained_trainer=None, n_pops: int = 12, H: int = 20,
-        out_json="results/fig6.json"):
+        out_json="results/fig6.json", hfel_search: str = "batched",
+        hfel_candidates: int = 16):
     sp = SystemParams(n_edges=5, lam=1.0)
     rng = np.random.default_rng(0)
     strategies = {
         "geo": GeoAssigner(sp),
         "hfel100": HFELAssigner(sp, n_transfer=100, n_exchange=100,
-                                alloc_steps=100),
+                                alloc_steps=100, search=hfel_search,
+                                n_candidates=hfel_candidates),
         "hfel300": HFELAssigner(sp, n_transfer=100, n_exchange=300,
-                                alloc_steps=100),
+                                alloc_steps=100, search=hfel_search,
+                                n_candidates=hfel_candidates),
     }
     if trained_trainer is not None:
         strategies["d3qn"] = DRLAssigner(sp, trained_trainer.params)

@@ -4,7 +4,9 @@ message volume vs cohort size H (reduced scale).
 Each H cell drives the fused batched round engine (``SweepRunner`` over
 one lane: IKC scheduling, geographic assignment, vmapped all-edges
 resource allocation, Algorithm-1 training fused into one jitted round)
-instead of re-running the per-edge ``HFLFramework`` loop.
+instead of re-running the per-edge ``HFLFramework`` loop. Pass
+``assign="hfel"`` to re-assign every round with the batched K-candidate
+HFEL search instead of the geographic baseline.
 """
 from __future__ import annotations
 
@@ -19,7 +21,8 @@ from repro.core.sweep import SweepRunner, build_scheduler
 
 
 def run(h_values=(10, 20, 40), target_acc: float = 0.62,
-        max_iters: int = 12, out_json="results/fig7.json"):
+        max_iters: int = 12, out_json="results/fig7.json",
+        assign: str = "geo"):
     sp, pop, fed = make_world("fmnist_syn", seed=0)
     runner = SweepRunner(sp, [(pop, fed)], lr=0.01, alloc_steps=100,
                          model_seed=0)
@@ -29,7 +32,7 @@ def run(h_values=(10, 20, 40), target_acc: float = 0.62,
         t0 = time.perf_counter()
         sched, clustering = build_scheduler(sched_name, fed, sp, H, K=10,
                                             lr=0.01, seed=0, pop=pop)
-        out = runner.run([sched], n_rounds=max_iters, assign="geo",
+        out = runner.run([sched], n_rounds=max_iters, assign=assign,
                          seeds=[0], target_acc=target_acc)
         wall = time.perf_counter() - t0
         it = int(out["iters"][0])

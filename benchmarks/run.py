@@ -5,10 +5,15 @@
 Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
 reduced scale by default (CPU container); EXPERIMENTS.md records the
 scale factors and validates the paper's *relative* claims.
+
+Each sub-benchmark runs in its own try block: one failure prints a
+``<name>,0.0,FAILED`` line and the remaining suites still run, but the
+process exits non-zero so CI can gate on the harness.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 import traceback
 
@@ -16,53 +21,89 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table2|fig34|fig5|fig6|fig7|kernels|roofline|engine")
+                    help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
+                         "engine|hfel")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     args = ap.parse_args()
 
+    state = {"trained": None}
+
+    def run_kernels():
+        from benchmarks import kernels_bench
+        kernels_bench.run()
+
+    def run_table2():
+        from benchmarks import table2_clustering
+        table2_clustering.run()
+
+    def run_fig5():
+        from benchmarks import fig5_drl_curve
+        state["trained"] = fig5_drl_curve.run(
+            episodes=80 if args.fast else 400)
+
+    def run_fig6():
+        from benchmarks import fig6_assignment
+        fig6_assignment.run(trained_trainer=state["trained"],
+                            n_pops=4 if args.fast else 12)
+
+    def run_fig34():
+        from benchmarks import fig34_convergence
+        fig34_convergence.run(iters=4 if args.fast else 10,
+                              h_values=(10,) if args.fast else (10, 20))
+
+    def run_fig7():
+        from benchmarks import fig7_framework
+        fig7_framework.run(h_values=(10, 20) if args.fast else (10, 20, 40),
+                           max_iters=4 if args.fast else 12)
+
+    def run_roofline():
+        from benchmarks import roofline
+        roofline.run()
+
+    def run_engine():
+        from benchmarks import bench_round_engine
+        bench_round_engine.run()
+
+    def run_hfel():
+        from benchmarks import bench_hfel_search
+        bench_hfel_search.run()
+
+    # fig6 reuses fig5's trained D3QN when both are selected, so order
+    # matters: fig5 before fig6
+    suites = [
+        ("kernels", run_kernels),
+        ("table2", run_table2),
+        ("fig5", run_fig5),
+        ("fig6", run_fig6),
+        ("fig34", run_fig34),
+        ("fig7", run_fig7),
+        ("roofline", run_roofline),
+        ("engine", run_engine),
+        ("hfel", run_hfel),
+    ]
+
+    names = [n for n, _ in suites]
+    if args.only is not None and args.only not in names:
+        ap.error(f"--only must be one of {'|'.join(names)}")
+
     print("name,us_per_call,derived", flush=True)
     t_all = time.time()
-
-    def want(name):
-        return args.only in (None, name)
-
-    trained = None
-    try:
-        if want("kernels"):
-            from benchmarks import kernels_bench
-            kernels_bench.run()
-        if want("table2"):
-            from benchmarks import table2_clustering
-            table2_clustering.run()
-        if want("fig5"):
-            from benchmarks import fig5_drl_curve
-            trained = fig5_drl_curve.run(
-                episodes=80 if args.fast else 400)
-        if want("fig6"):
-            from benchmarks import fig6_assignment
-            fig6_assignment.run(trained_trainer=trained,
-                                n_pops=4 if args.fast else 12)
-        if want("fig34"):
-            from benchmarks import fig34_convergence
-            fig34_convergence.run(iters=4 if args.fast else 10,
-                                  h_values=(10,) if args.fast else (10, 20))
-        if want("fig7"):
-            from benchmarks import fig7_framework
-            fig7_framework.run(h_values=(10, 20) if args.fast else (10, 20, 40),
-                               max_iters=4 if args.fast else 12)
-        if want("roofline"):
-            from benchmarks import roofline
-            roofline.run()
-        if want("engine"):
-            from benchmarks import bench_round_engine
-            bench_round_engine.run()
-    except Exception:  # noqa: BLE001
-        traceback.print_exc()
-        print("benchmark_suite,0.0,FAILED", flush=True)
-        raise
-    print(f"benchmark_suite_total,{(time.time()-t_all)*1e6:.0f},ok",
+    failed = []
+    for name, fn in suites:
+        if args.only not in (None, name):
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED", flush=True)
+            failed.append(name)
+    status = f"failed={'|'.join(failed)}" if failed else "ok"
+    print(f"benchmark_suite_total,{(time.time()-t_all)*1e6:.0f},{status}",
           flush=True)
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

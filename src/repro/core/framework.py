@@ -94,6 +94,8 @@ class FrameworkConfig:
     seed: int = 0
     use_kernel: bool = False        # Pallas kmeans kernel (interpret on CPU)
     engine: str = "fused"           # fused | sequential (per-edge oracle)
+    hfel_search: str = "batched"    # batched | serial (assigner="hfel")
+    hfel_candidates: int = 16       # K moves per batched HFEL round
 
 
 class HFLFramework:
@@ -166,7 +168,9 @@ class HFLFramework:
             assert drl_params is not None, "need trained D3QN params"
             self.assigner = DRLAssigner(self.sp, drl_params)
         elif a == "hfel":
-            self.assigner = HFELAssigner(self.sp)
+            self.assigner = HFELAssigner(
+                self.sp, search=self.cfg.hfel_search,
+                n_candidates=self.cfg.hfel_candidates)
         else:
             self.assigner = GeoAssigner(self.sp)
 

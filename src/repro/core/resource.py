@@ -21,6 +21,9 @@ edge axis, and ``allocate_all_edges`` gathers a population + schedule into
 the ``(M, n_slots)`` batch so all M per-edge problems are solved in ONE
 jit call — the building block of the fused round engine
 (``repro.core.framework.round_step`` and ``repro.core.sweep``).
+``flatten_trials``/``unflatten_trials`` map trial-major ``(K, E, ...)``
+candidate batches onto the same flat layout, which is how the batched
+HFEL search solves the affected edges of K moves per dispatch.
 """
 from __future__ import annotations
 
@@ -50,14 +53,20 @@ def _edge_terms(sp: SystemParams, u, D, p, g, b, f, mask):
     return t, e
 
 
-def _allocate_impl(sp: SystemParams, u, D, p, g, B_m, mask,
-                   steps: int) -> AllocResult:
+def _allocate_core(sp: SystemParams, u, D, p, g, B_m, mask,
+                   steps: int, theta0=None):
     """Solve (27) for one edge. All inputs (n_slots,) + scalar B_m.
 
     mask: bool (n_slots,) — which slots hold real devices.
+    theta0: optional (tb, tf) reparameterised warm start — e.g. the
+    incumbent solution of a nearby problem (one device joined/left the
+    edge), which lets callers converge in far fewer Adam steps than the
+    cold init. None keeps the historical cold start.
 
-    Pure traceable body (no jit) so it can be vmapped over an edge axis
-    or inlined into larger fused programs.
+    Returns (AllocResult, theta) where theta is the final (tb, tf) pair
+    so callers can chain warm starts. Pure traceable body (no jit) so it
+    can be vmapped over an edge axis or inlined into larger fused
+    programs.
     """
     n = u.shape[0]
     any_dev = jnp.any(mask)
@@ -81,7 +90,8 @@ def _allocate_impl(sp: SystemParams, u, D, p, g, B_m, mask,
         tmax = tau * jax.scipy.special.logsumexp(tmask)
         return sp.Q * jnp.sum(e) + sp.lam * sp.Q * tmax
 
-    theta0 = (jnp.zeros(n), jnp.full((n,), 1.0))  # f starts near 0.73 f_max
+    if theta0 is None:
+        theta0 = (jnp.zeros(n), jnp.full((n,), 1.0))  # f starts ~0.73 f_max
 
     # Adam
     lr, b1, b2, eps = 0.08, 0.9, 0.999, 1e-8
@@ -116,8 +126,15 @@ def _allocate_impl(sp: SystemParams, u, D, p, g, B_m, mask,
     T_edge = sp.Q * jnp.max(jnp.where(mask, t, 0.0))
     E_edge = sp.Q * jnp.sum(e)
     obj = jnp.where(any_dev, E_edge + sp.lam * T_edge, 0.0)
-    return AllocResult(b, f, jnp.where(any_dev, T_edge, 0.0),
-                       jnp.where(any_dev, E_edge, 0.0), obj)
+    res = AllocResult(b, f, jnp.where(any_dev, T_edge, 0.0),
+                      jnp.where(any_dev, E_edge, 0.0), obj)
+    return res, theta
+
+
+def _allocate_impl(sp: SystemParams, u, D, p, g, B_m, mask,
+                   steps: int) -> AllocResult:
+    """Cold-start solve of (27); see ``_allocate_core``."""
+    return _allocate_core(sp, u, D, p, g, B_m, mask, steps)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("sp", "steps"))
@@ -140,6 +157,60 @@ def allocate_batch(sp: SystemParams, u, D, p, g, B_m, mask,
         lambda u_, D_, p_, g_, B_, m_:
             _allocate_impl(sp, u_, D_, p_, g_, B_, m_, steps)
     )(u, D, p, g, B_m, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sp", "steps"))
+def allocate_batch_warm(sp: SystemParams, u, D, p, g, B_m, mask, tb0, tf0,
+                        steps: int = 60):
+    """``allocate_batch`` warm-started from caller-provided solver state.
+
+    tb0, tf0: (M, n_slots) reparameterised (bandwidth-logit, frequency)
+    iterates from a prior solve of a *nearby* problem — e.g. HFEL's
+    incumbent per-edge solutions, where a trial edge differs by one
+    joined/left device. Starting at the incumbent lets ``steps`` be a
+    fraction of the cold-start count at equal solution quality, which is
+    what makes K-candidate search rounds cheaper than K serial trials
+    in FLOPs and not just in dispatch overhead.
+
+    Returns (AllocResult, (tb, tf)) with the leading edge axis on every
+    field, the final iterates ready to seed the next warm solve.
+    """
+    return jax.vmap(
+        lambda u_, D_, p_, g_, B_, m_, tb_, tf_:
+            _allocate_core(sp, u_, D_, p_, g_, B_, m_, steps, (tb_, tf_))
+    )(u, D, p, g, B_m, mask, tb0, tf0)
+
+
+def flatten_trials(u, D, p, g, B_m, mask, *extras):
+    """Collapse trial-major allocation inputs to ``allocate_batch``'s layout.
+
+    The batched HFEL search evaluates K candidate moves per round, each
+    re-solving its E affected edges (E = 2 for transfer/exchange moves).
+    Inputs arrive trial-major — u, D, p, g, mask ``(K, E, n_slots)`` and
+    B_m ``(K, E)`` — and are reshaped to the flat ``(K*E, ...)`` batch
+    that ``allocate_batch`` consumes, so all K·E edge problems solve in
+    ONE jit call. Row ``k*E + e`` holds trial k's e-th affected edge;
+    ``unflatten_trials`` is the inverse. Any ``extras`` (e.g. the
+    ``(K, E, n_slots)`` warm-start iterates for ``allocate_batch_warm``)
+    are flattened the same way and appended to the returned tuple.
+    """
+    K, E = mask.shape[:2]
+
+    def flat(a):
+        a = jnp.asarray(a)
+        return a.reshape((K * E,) + a.shape[2:])
+
+    return (flat(u), flat(D), flat(p), flat(g), flat(B_m), flat(mask),
+            *(flat(x) for x in extras))
+
+
+def unflatten_trials(res: AllocResult, n_trials: int, n_edges: int
+                     ) -> AllocResult:
+    """Reshape a flat ``(n_trials*n_edges, ...)`` AllocResult back to
+    trial-major ``(n_trials, n_edges, ...)`` — the inverse of
+    ``flatten_trials`` on every result field."""
+    return AllocResult(*(jnp.reshape(a, (n_trials, n_edges) + a.shape[1:])
+                         for a in res))
 
 
 def gather_edge_inputs(pop, sched, assign):

@@ -153,6 +153,24 @@ def _geo_assign(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
 ASSIGN_FNS: Dict[str, Callable] = {"mod": _mod_assign, "geo": _geo_assign}
 
 
+def make_hfel_assign(sp: cm.SystemParams, *, n_transfer: int = 40,
+                     n_exchange: int = 80, alloc_steps: int = 100,
+                     n_candidates: int = 16) -> Callable:
+    """Assignment callable driving the batched K-candidate HFEL search
+    (``assign="hfel"`` in ``SweepRunner.run``). Reduced trial budget by
+    default: sweeps re-assign every round, so per-round search latency
+    matters more than squeezing the last percent of J(Ψ)."""
+    from repro.core.assignment.hfel import HFELAssigner
+    assigner = HFELAssigner(sp, n_transfer=n_transfer,
+                            n_exchange=n_exchange, alloc_steps=alloc_steps,
+                            search="batched", n_candidates=n_candidates)
+
+    def fn(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
+        return np.asarray(assigner.assign(pop, sched, rng)[0])
+
+    return fn
+
+
 class SweepRunner:
     """Vmapped multi-lane driver for the fused round engine.
 
@@ -208,7 +226,8 @@ class SweepRunner:
             sizes: str = "pop", train_only: bool = False) -> Dict:
         """Run n_rounds of all S lanes; lane s uses schedulers[s].
 
-        assign: "geo" | "mod" | callable(pop, sched, rng) -> (H,) edges.
+        assign: "geo" | "mod" | "hfel" (batched K-candidate search via
+        ``make_hfel_assign``) | callable(pop, sched, rng) -> (H,) edges.
         sizes: Algorithm-1 aggregation weights — "pop" (cost-model pop.D,
         HFLFramework semantics) or "fed" (actual federated partition
         sizes, the Fig. 3/4 training-curve semantics).
@@ -219,7 +238,12 @@ class SweepRunner:
         (or n_rounds), "obj": (S, R)} as numpy arrays.
         """
         assert len(schedulers) == self.S
-        assign_fn = ASSIGN_FNS[assign] if isinstance(assign, str) else assign
+        if isinstance(assign, str):
+            assign_fn = make_hfel_assign(self.sp,
+                                         alloc_steps=self.alloc_steps) \
+                if assign == "hfel" else ASSIGN_FNS[assign]
+        else:
+            assign_fn = assign
         if sizes not in ("pop", "fed"):
             raise ValueError(f"sizes must be 'pop' or 'fed', got {sizes!r}")
         sizes_b = self.D_b if sizes == "pop" else self.fed_sizes_b

@@ -18,24 +18,47 @@ def test_geo_assigns_nearest_edge():
     assert np.array_equal(a, d.argmin(axis=1))
 
 
-def test_hfel_improves_over_geo_init():
+@pytest.mark.parametrize("search", ["serial", "batched"])
+def test_hfel_improves_over_geo_init(search):
     rng = np.random.default_rng(0)
     geo, _ = GeoAssigner(SP).assign(POP, SCHED)
     j_geo, _, _ = total_objective(SP, POP, SCHED, geo, alloc_steps=120)
-    hfel = HFELAssigner(SP, n_transfer=40, n_exchange=80, alloc_steps=120)
+    hfel = HFELAssigner(SP, n_transfer=40, n_exchange=80, alloc_steps=120,
+                        search=search)
     a, j_hfel = hfel.assign(POP, SCHED, rng)
     assert a.shape == (20,)
     assert set(a.tolist()) <= set(range(SP.n_edges))    # (15f) valid edges
     assert j_hfel <= j_geo * 1.001
 
 
-def test_hfel_objective_matches_total_objective():
+@pytest.mark.parametrize("search", ["serial", "batched"])
+def test_hfel_objective_matches_total_objective(search):
     rng = np.random.default_rng(1)
-    hfel = HFELAssigner(SP, n_transfer=20, n_exchange=30, alloc_steps=120)
+    hfel = HFELAssigner(SP, n_transfer=20, n_exchange=30, alloc_steps=120,
+                        search=search)
     a, j = hfel.assign(POP, SCHED, rng)
     j2, T_m, E_m = total_objective(SP, POP, SCHED, a, alloc_steps=120)
     assert j == pytest.approx(j2, rel=0.05)
     assert np.all(T_m >= 0) and np.all(E_m >= 0)
+
+
+def test_batched_quality_not_worse_than_serial():
+    """Parity: at the same seed and trial budget, the K-candidate engine
+    reaches an objective no worse than the serial oracle's."""
+    ser = HFELAssigner(SP, n_transfer=40, n_exchange=80, alloc_steps=120,
+                       search="serial")
+    bat = HFELAssigner(SP, n_transfer=40, n_exchange=80, alloc_steps=120,
+                       search="batched")
+    for seed in (0, 1, 2):
+        _, j_ser = ser.assign(POP, SCHED, np.random.default_rng(seed))
+        _, j_bat = bat.assign(POP, SCHED, np.random.default_rng(seed))
+        assert j_bat <= j_ser * 1.01
+
+
+def test_unknown_search_engine_raises():
+    hfel = HFELAssigner(SP, n_transfer=5, n_exchange=5, search="magic")
+    with pytest.raises(ValueError, match="search engine"):
+        hfel.assign(POP, SCHED, np.random.default_rng(0))
 
 
 def test_more_search_never_worse():

@@ -75,6 +75,64 @@ def test_lambda_tradeoff():
     assert t_hi <= t_lo * 1.05
 
 
+def test_flatten_unflatten_trials_roundtrip():
+    """The flat (K*E, H) trial layout solves each trial's edges exactly
+    as an independent per-trial batch would."""
+    K, E, H = 3, 2, 6
+    rng = np.random.default_rng(0)
+    idx = jnp.arange(H)
+    u = jnp.broadcast_to(POP.u[idx], (K, E, H))
+    D = jnp.broadcast_to(POP.D[idx], (K, E, H))
+    p = jnp.broadcast_to(POP.p[idx], (K, E, H))
+    g = jnp.broadcast_to(POP.g[idx, 0], (K, E, H))
+    B = jnp.broadcast_to(POP.B_m[:E], (K, E))
+    mask = jnp.asarray(rng.random((K, E, H)) < 0.6)
+    flat = ra.flatten_trials(u, D, p, g, B, mask)
+    assert flat[0].shape == (K * E, H)
+    assert flat[4].shape == (K * E,)
+    assert flat[5].shape == (K * E, H)
+    res = ra.unflatten_trials(ra.allocate_batch(SP, *flat, steps=40), K, E)
+    assert res.T_edge.shape == (K, E)
+    assert res.b.shape == (K, E, H)
+    for k in range(K):
+        ref = ra.allocate_batch(SP, u[k], D[k], p[k], g[k], B[k], mask[k],
+                                steps=40)
+        np.testing.assert_allclose(np.asarray(res.T_edge[k]),
+                                   np.asarray(ref.T_edge), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.b[k]),
+                                   np.asarray(ref.b), rtol=1e-5)
+
+
+def test_flatten_trials_extras_flattened_alongside():
+    K, E, H = 2, 2, 4
+    mask = jnp.ones((K, E, H), bool)
+    zeros = jnp.zeros((K, E, H))
+    B = jnp.ones((K, E))
+    *_, tb, tf = ra.flatten_trials(zeros, zeros, zeros, zeros, B, mask,
+                                   zeros, zeros + 1.0)
+    assert tb.shape == (K * E, H)
+    assert float(tf.min()) == 1.0
+
+
+def test_warm_solver_neutral_start_matches_cold():
+    """allocate_batch_warm from the neutral iterates is the cold solve."""
+    u, D, p, g, B, mask = _edge_inputs(6)
+    batch = lambda a: jnp.broadcast_to(a, (2,) + a.shape)  # noqa: E731
+    args = (batch(u), batch(D), batch(p), batch(g),
+            jnp.broadcast_to(B, (2,)), batch(mask))
+    cold = ra.allocate_batch(SP, *args, steps=60)
+    warm, (tb, tf) = ra.allocate_batch_warm(
+        SP, *args, jnp.zeros((2, 6)), jnp.ones((2, 6)), steps=60)
+    np.testing.assert_allclose(np.asarray(warm.obj), np.asarray(cold.obj),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(warm.b), np.asarray(cold.b),
+                               rtol=1e-5)
+    assert tb.shape == (2, 6) and tf.shape == (2, 6)
+    # restarting from the final iterates stays at the optimum
+    warm2, _ = ra.allocate_batch_warm(SP, *args, tb, tf, steps=20)
+    assert float(warm2.obj[0]) <= float(cold.obj[0]) * 1.01
+
+
 def test_masked_allocation_is_finite():
     """Regression: grad(logsumexp(-inf)) NaN + f32 underflow of (N0*b)^2
     in the rate VJP used to poison every masked allocation."""
