@@ -7,16 +7,14 @@ Standalone (not part of benchmarks.run defaults):
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 
 import numpy as np
 
-from benchmarks.common import emit, make_world
+from benchmarks.common import emit
 from repro.core import cost_model as cm
-from repro.core import resource as ra
-from repro.core.assignment import GeoAssigner, HFELAssigner
+from repro.core.assignment import HFELAssigner
 from repro.core.assignment.hfel import total_objective
 from repro.drl.train import make_training_population
 

@@ -3,11 +3,9 @@ experiments (CPU container: scales recorded in EXPERIMENTS.md; relative
 orderings are what we validate against the paper)."""
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Callable, Dict
+from typing import Callable
 
-import numpy as np
 
 from repro.core.cost_model import SystemParams, sample_population
 from repro.data import make_dataset, partition_noniid

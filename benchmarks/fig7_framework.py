@@ -14,7 +14,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 from benchmarks.common import emit, make_world
 from repro.core.sweep import SweepRunner, build_scheduler

@@ -30,7 +30,7 @@ import traceback
 import jax
 
 from repro.configs.base import INPUT_SHAPES
-from repro.configs.registry import ARCH_IDS, get_config, variant_for_shape
+from repro.configs.registry import get_config, variant_for_shape
 from repro.launch import steps as S
 from repro.launch.dryrun import parse_collectives
 from repro.launch.mesh import make_production_mesh

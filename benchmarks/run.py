@@ -1,30 +1,63 @@
 """Benchmark harness — one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke|--perf] [--only NAME]
 
 Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
 reduced scale by default (CPU container); EXPERIMENTS.md records the
-scale factors and validates the paper's *relative* claims.
+scale factors and validates the paper's *relative* claims. ``--smoke``
+restricts to the perf-tracking micro-benchmarks (engine / hfel /
+hier_agg) at their tiny CI shapes — the bench-smoke CI job runs exactly
+that and uploads the ``results/*.json`` outputs as artifacts. ``--perf``
+runs the same three at full scale but writes the JSON under
+``results/`` (gitignored), so the weekly CI job's artifacts are always
+freshly produced files, never the committed repo-root ``BENCH_*.json``.
 
 Each sub-benchmark runs in its own try block: one failure prints a
 ``<name>,0.0,FAILED`` line and the remaining suites still run, but the
-process exits non-zero so CI can gate on the harness.
+process exits non-zero so CI can gate on the harness. Per-suite wall
+times are collected and, when ``$GITHUB_STEP_SUMMARY`` is set (any
+GitHub Actions job), appended there as a markdown table.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+
+def write_step_summary(rows, total_s: float, path: str | None = None) -> None:
+    """Append the per-suite timings table to $GITHUB_STEP_SUMMARY (no-op
+    outside GitHub Actions). rows: [(suite, seconds, status)]."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["## Benchmark suite timings", "",
+             "| suite | wall time | status |",
+             "|---|---:|---|"]
+    for name, secs, status in rows:
+        lines.append(f"| {name} | {secs:.1f} s | {status} |")
+    lines += [f"| **total** | **{total_s:.1f} s** | |", ""]
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
-                         "engine|hfel")
+                         "engine|hfel|hier_agg")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: only the perf micro-benchmarks at "
+                         "tiny shapes (JSON under results/)")
+    ap.add_argument("--perf", action="store_true",
+                    help="only the perf micro-benchmarks at full scale, "
+                         "JSON written under results/ (fresh files for "
+                         "CI artifacts — never the committed repo-root "
+                         "BENCH_*.json)")
     args = ap.parse_args()
 
     state = {"trained": None}
@@ -61,13 +94,25 @@ def main() -> None:
         from benchmarks import roofline
         roofline.run()
 
+    def _perf_bench(mod, name):
+        if args.smoke:
+            mod.run_smoke()
+        elif args.perf:
+            mod.run(out_json=f"results/BENCH_{name}.json")
+        else:
+            mod.run()
+
     def run_engine():
         from benchmarks import bench_round_engine
-        bench_round_engine.run()
+        _perf_bench(bench_round_engine, "round_engine")
 
     def run_hfel():
         from benchmarks import bench_hfel_search
-        bench_hfel_search.run()
+        _perf_bench(bench_hfel_search, "hfel_search")
+
+    def run_hier_agg():
+        from benchmarks import bench_hier_agg
+        _perf_bench(bench_hier_agg, "hier_agg")
 
     # fig6 reuses fig5's trained D3QN when both are selected, so order
     # matters: fig5 before fig6
@@ -81,7 +126,11 @@ def main() -> None:
         ("roofline", run_roofline),
         ("engine", run_engine),
         ("hfel", run_hfel),
+        ("hier_agg", run_hier_agg),
     ]
+    if args.smoke or args.perf:
+        perf_names = ("engine", "hfel", "hier_agg")
+        suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]
     if args.only is not None and args.only not in names:
@@ -90,18 +139,23 @@ def main() -> None:
     print("name,us_per_call,derived", flush=True)
     t_all = time.time()
     failed = []
+    timings = []
     for name, fn in suites:
         if args.only not in (None, name):
             continue
+        t0 = time.time()
         try:
             fn()
+            timings.append((name, time.time() - t0, "ok"))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},0.0,FAILED", flush=True)
             failed.append(name)
+            timings.append((name, time.time() - t0, "FAILED"))
+    total = time.time() - t_all
     status = f"failed={'|'.join(failed)}" if failed else "ok"
-    print(f"benchmark_suite_total,{(time.time()-t_all)*1e6:.0f},{status}",
-          flush=True)
+    print(f"benchmark_suite_total,{total * 1e6:.0f},{status}", flush=True)
+    write_step_summary(timings, total)
     if failed:
         sys.exit(1)
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit, make_world
 from repro.core.clustering import adjusted_rand_index

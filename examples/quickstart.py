@@ -10,7 +10,6 @@
 """
 import time
 
-import numpy as np
 
 from repro.core.cost_model import SystemParams, sample_population
 from repro.core.framework import FrameworkConfig, HFLFramework

@@ -12,7 +12,6 @@ is the reproduced claim.
 import argparse
 import time
 
-import numpy as np
 
 from repro.core.cost_model import SystemParams, sample_population
 from repro.core.framework import FrameworkConfig, HFLFramework

@@ -3,9 +3,9 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, List
+from typing import List
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 
 _MODULES = {
     "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",

@@ -24,7 +24,9 @@ Two search engines share the move neighborhood:
   ``(K·2, H)`` layout via ``resource.flatten_trials`` /
   ``unflatten_trials``), scores all K objectives J(Ψ_k) in one
   vectorised pass, and commits up to ``accept_top`` non-conflicting
-  improving moves in ΔJ order. Moves with disjoint affected-edge sets
+  improving moves in ΔJ order — the accept pass itself is a jitted
+  sorted/masked ``lax.scan`` (``_accept_scan``), not a Python loop over
+  the K candidates. Moves with disjoint affected-edge sets
   also move disjoint devices, so their per-edge solves compose exactly;
   each extra accept is re-verified against the exact combined objective
   before committing. A serial trial budget of n maps onto
@@ -42,8 +44,10 @@ Two search engines share the move neighborhood:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +55,62 @@ from repro.core import cost_model as cm
 from repro.core import resource as ra
 
 _TRANSFER, _EXCHANGE = 0, 1
+
+
+def _objective(Tv, Ev, T_cl, E_cl, lam):
+    """J(Ψ) (17) including the constant cloud terms. Works on numpy or
+    jnp arrays, and reduces the trailing edge axis so it scores one (M,)
+    pattern or a whole (K, M) candidate round. The single authoritative
+    formula — shared by the host-side scoring in ``assign`` and the
+    jitted accept scan, so the two can never diverge."""
+    return (Ev + E_cl).sum(-1) + lam * (Tv + T_cl).max(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("accept_top",))
+def _accept_scan(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
+                 *, accept_top: int):
+    """Vectorised accept pass over one round's candidates, sorted by J.
+
+    Replaces the host-side Python loop over ≤K moves with ONE jitted
+    ``lax.scan`` carrying the incumbent per-edge (T, E) tables, the
+    current objective, the set of already-touched edges (an (M,) mask)
+    and the accept count. Inputs are ASCENDING-J sorted and padded to a
+    fixed K (``valid`` masks the padding), so each (K, M) shape compiles
+    once. Per candidate, in order:
+
+    * improving — J beats the ROUND-START incumbent ``cur0`` (the sorted
+      serial loop's early ``break``: every later candidate fails too);
+    * blocked — an edge already touched by an accepted move, or the
+      ``accept_top`` cap: emit a carry flag (re-proposed next round);
+    * otherwise re-verify the EXACT combined objective against the
+      carried tables and accept iff it beats the carried ``cur``.
+
+    Returns (T, E, cur, accept_flags, carry_flags) — flags in the sorted
+    order, committed to host state by the caller.
+    """
+    M = T0.shape[0]
+
+    def step(carry, inp):
+        T, E, cur, used, n_acc = carry
+        j_i, e, t_i, e_i, v = inp
+        improving = v & (j_i < cur0 - 1e-9)
+        blocked = used[e[0]] | used[e[1]] | (n_acc >= accept_top)
+        T_try = T.at[e].set(t_i)
+        E_try = E.at[e].set(e_i)
+        J_try = _objective(T_try, E_try, T_cl, E_cl, lam)
+        accept = improving & ~blocked & (J_try < cur - 1e-9)
+        T = jnp.where(accept, T_try, T)
+        E = jnp.where(accept, E_try, E)
+        cur = jnp.where(accept, J_try, cur)
+        touched = (jnp.arange(M) == e[0]) | (jnp.arange(M) == e[1])
+        used = used | (accept & touched)
+        n_acc = n_acc + accept.astype(jnp.int32)
+        return (T, E, cur, used, n_acc), (accept, improving & blocked)
+
+    init = (T0, E0, cur0, jnp.zeros(M, bool), jnp.asarray(0, jnp.int32))
+    (T, E, cur, _, _), (acc, car) = jax.lax.scan(
+        step, init, (J, edges, Tn, En, valid))
+    return T, E, cur, acc, car
 
 
 def _edges_eval_warm(sp, feats, assign, edges, B, steps, tb0, tf0):
@@ -204,14 +264,13 @@ class HFELAssigner:
         else:
             assign = np.asarray(init_assign).copy()
 
-        def obj(Tv, Ev):
-            # batch-friendly: reduces the trailing edge axis, so it
-            # scores one (M,) pattern or a whole (K, M) candidate round
-            return (Ev + E_cl).sum(-1) + self.sp.lam * (Tv + T_cl).max(-1)
+        obj = functools.partial(_objective, T_cl=T_cl, E_cl=E_cl,
+                                lam=self.sp.lam)
 
         if self.search == "serial":
             return self._search_serial(feats, B, obj, assign, rng, H, M)
-        return self._search_batched(feats, B, obj, assign, rng, H, M)
+        return self._search_batched(feats, B, obj, assign, rng, H, M,
+                                    T_cl, E_cl)
 
     # ------------------------------------------------------ serial oracle
 
@@ -300,7 +359,7 @@ class HFELAssigner:
                 moves.append((_EXCHANGE, key[0], key[1]))
         return moves
 
-    def _search_batched(self, feats, B, obj, assign, rng, H, M):
+    def _search_batched(self, feats, B, obj, assign, rng, H, M, T_cl, E_cl):
         K = max(1, int(self.n_candidates))
         warm = self.warm_steps or max(25, (2 * self.alloc_steps) // 5)
         # all M edges in one full-fidelity solve; neutral iterates make
@@ -320,11 +379,12 @@ class HFELAssigner:
                 remaining -= k
                 moves = self._propose(rng, st.assign, H, M, k, kind, carry)
                 if moves:
-                    carry = self._round(moves, feats, B, obj, st, K, warm)
+                    carry = self._round(moves, feats, B, obj, st, K, warm,
+                                        T_cl, E_cl)
         return st.assign, st.cur
 
-    def _round(self, moves, feats, B, obj, st, K, warm_steps
-               ) -> List[tuple]:
+    def _round(self, moves, feats, B, obj, st, K, warm_steps,
+               T_cl, E_cl) -> List[tuple]:
         """Evaluate one round of candidate moves in a single dispatch and
         commit up to ``accept_top`` non-conflicting improving moves.
         Returns the improving-but-unaccepted moves for carry-over."""
@@ -343,31 +403,46 @@ class HFELAssigner:
         E2[rows, edges] = En
         J = np.asarray(obj(T2, E2))
 
-        accepted_edges: set = set()
-        accepted = 0
+        # accept pass: one jitted sorted/masked scan over the (padded) K
+        # candidates instead of a Python loop. Disjoint accepted edges =>
+        # disjoint devices => the standalone per-edge solves stay exact
+        # under the combined assignment; the scan re-verifies the exact
+        # combined objective before each accept. Improving-but-blocked
+        # moves come back flagged for carry-over.
+        order = np.argsort(J)
+        pad = K - n
+
+        def spad(a, fill=0.0):
+            a = np.asarray(a)[order]
+            return np.concatenate(
+                [a, np.full((pad,) + a.shape[1:], fill, a.dtype)]) \
+                if pad else a
+
+        T_out, E_out, cur, acc, car = _accept_scan(
+            jnp.asarray(spad(J, np.inf)),
+            jnp.asarray(spad(edges)),
+            jnp.asarray(spad(Tn)), jnp.asarray(spad(En)),
+            jnp.asarray(st.T), jnp.asarray(st.E),
+            jnp.asarray(st.cur, jnp.float32),
+            jnp.asarray(T_cl), jnp.asarray(E_cl),
+            jnp.asarray(self.sp.lam, jnp.float32),
+            jnp.asarray(np.arange(K) < n),
+            accept_top=self.accept_top)
+        acc, car = np.asarray(acc), np.asarray(car)
+
         carry: List[tuple] = []
-        round_cur = st.cur
-        for i in np.argsort(J):
-            if J[i] >= round_cur - 1e-9:
-                break                      # sorted: no better ones left
-            eset = {int(edges[i, 0]), int(edges[i, 1])}
-            if eset & accepted_edges or accepted >= self.accept_top:
+        for pos in range(n):
+            i = order[pos]
+            if acc[pos]:
+                st.assign = _apply_move(st.assign, moves[i])
+                st.tb[edges[i]] = tb_n[i]
+                st.tf[edges[i]] = tf_n[i]
+            elif car[pos]:
                 # improving against the round-start incumbent but its
                 # solves are stale (or the accept cap is hit): carry it
                 # into the next round's budget instead of discarding
                 carry.append(moves[i])
-                continue
-            # disjoint edges => disjoint devices => the standalone
-            # per-edge solves stay exact under the combined assignment;
-            # re-verify the exact combined objective before committing
-            T_try, E_try = st.T.copy(), st.E.copy()
-            T_try[edges[i]], E_try[edges[i]] = Tn[i], En[i]
-            J_try = float(obj(T_try, E_try))
-            if J_try < st.cur - 1e-9:
-                st.assign = _apply_move(st.assign, moves[i])
-                st.T, st.E, st.cur = T_try, E_try, J_try
-                st.tb[edges[i]] = tb_n[i]
-                st.tf[edges[i]] = tf_n[i]
-                accepted_edges |= eset
-                accepted += 1
+        if acc.any():
+            st.T, st.E = np.array(T_out), np.array(E_out)
+            st.cur = float(cur)
         return carry

@@ -8,7 +8,7 @@ kernel's oracle.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,9 @@ all-edges resource allocation, ``round_cost`` and the Algorithm-1
 training are one jitted program, so a round costs ONE device dispatch +
 host sync instead of ~M+3 (the old per-edge Python loop is kept as
 ``engine="sequential"`` — the parity oracle for tests).
+``FrameworkConfig(agg_kernel=True)`` additionally routes the Algorithm-1
+edge/cloud aggregation through the fused masked-weight
+``kernels/hier_agg`` Pallas kernel (interpret mode off-TPU).
 
 Tracks the paper's reported quantities: accuracy trajectory, T (13),
 E (14), objective E + λT (15), and transmitted message volume per round
@@ -44,15 +47,18 @@ from repro.utils import tree_bytes
 
 def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
                     g_cloud, B_m, X, y, mask, sizes, assign, lr, *,
-                    M: int, L: int, Q: int, alloc_steps: int):
+                    M: int, L: int, Q: int, alloc_steps: int,
+                    agg_kernel: bool = False):
     """Traceable fused round: one global iteration minus scheduling.
 
     Inputs are pre-gathered for the scheduled cohort: u/D/p/sizes (H,),
     g (H, M) gains to every edge, X/y/mask (H, Dmax, ...), assign (H,).
     Fuses (a) per-edge one-hot/mask construction, (b) the vmapped
     all-edges resource allocation (27), (c) round costs (13)/(14) and
-    (d) Algorithm-1 training into one program. Returns
-    (new_params, (T_i, E_i, T_m, E_m, b, f)).
+    (d) Algorithm-1 training into one program. ``agg_kernel=True`` runs
+    the hierarchical aggregation (2)-(3) through the fused masked-weight
+    ``kernels/hier_agg`` Pallas kernel (interpret off-TPU) instead of
+    masked XLA einsums. Returns (new_params, (T_i, E_i, T_m, E_m, b, f)).
     """
     H = assign.shape[0]
     edge_mask = assign[None, :] == jnp.arange(M)[:, None]       # (M, H)
@@ -66,19 +72,21 @@ def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
     T_i, E_i, T_m, E_m = cm.round_cost_gathered(
         sp, u, D, p, g_sel, g_cloud, assign, b, f, M)
     new_params = hfl_global_iteration_core(
-        apply_fn, params, X, y, mask, sizes, assign, M=M, L=L, Q=Q, lr=lr)
+        apply_fn, params, X, y, mask, sizes, assign, M=M, L=L, Q=Q, lr=lr,
+        agg_kernel=agg_kernel)
     return new_params, (T_i, E_i, T_m, E_m, b, f)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "apply_fn", "sp", "M", "L", "Q", "alloc_steps"))
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "agg_kernel"))
 def round_step(apply_fn, sp: cm.SystemParams, params, u, D, p, g, g_cloud,
                B_m, X, y, mask, sizes, assign, lr, *, M: int, L: int,
-               Q: int, alloc_steps: int):
+               Q: int, alloc_steps: int, agg_kernel: bool = False):
     """Jitted fused round — see ``round_step_core``."""
     return round_step_core(apply_fn, sp, params, u, D, p, g, g_cloud, B_m,
                            X, y, mask, sizes, assign, lr,
-                           M=M, L=L, Q=Q, alloc_steps=alloc_steps)
+                           M=M, L=L, Q=Q, alloc_steps=alloc_steps,
+                           agg_kernel=agg_kernel)
 
 
 @dataclasses.dataclass
@@ -93,6 +101,7 @@ class FrameworkConfig:
     alloc_steps: int = 200
     seed: int = 0
     use_kernel: bool = False        # Pallas kmeans kernel (interpret on CPU)
+    agg_kernel: bool = False        # Pallas hier_agg aggregation backend
     engine: str = "fused"           # fused | sequential (per-edge oracle)
     hfel_search: str = "batched"    # batched | serial (assigner="hfel")
     hfel_candidates: int = 16       # K moves per batched HFEL round
@@ -195,7 +204,8 @@ class HFLFramework:
                 self.X[sched], self.y[sched], self.mask[sched],
                 pop.D[sched], jnp.asarray(assign), self.cfg.lr,
                 M=pop.n_edges, L=sp.L, Q=sp.Q,
-                alloc_steps=self.cfg.alloc_steps)
+                alloc_steps=self.cfg.alloc_steps,
+                agg_kernel=self.cfg.agg_kernel)
 
         acc = evaluate_in_batches(self.apply_fn, self.model_params,
                                   self.fed.X_test, self.fed.y_test)

@@ -8,14 +8,20 @@ iterations runs L local full-batch GD steps per device from that device's
 iterations the cloud aggregates the edge models weighted by their cohort
 data sizes (3).
 
-Implementation: devices are vmapped; edge/cloud aggregation is a masked
-einsum against the assignment one-hot, optionally routed through the
-Pallas ``hier_agg`` kernel.
+Implementation: devices are vmapped. Edge/cloud aggregation has two
+backends selected by ``agg_kernel``: the default masked XLA einsum
+against the assignment one-hot, or (``agg_kernel=True``) the fused
+masked-weight ``kernels/hier_agg`` Pallas kernel, which streams the
+(H, P) delta matrix through VMEM once and builds the normalised (M, H)
+weight panel in-kernel from the one-hot + device sizes (interpret mode
+off-TPU). Both backends share the empty-edge fixup (edges with no
+devices keep their model) and the eq.-(3) weights; the einsum path is
+the parity oracle (``tests/test_kernels.py`` / ``test_round_engine.py``).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,19 +49,37 @@ def pad_device_data(fed: FederatedData, Dmax: Optional[int] = None):
 
 def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
                               sizes, assign, *, M: int, L: int, Q: int,
-                              lr: float):
+                              lr: float, agg_kernel: bool = False):
     """Algorithm 1, traceable core (no jit) — inlined by the fused round
     engine (``framework.round_step``) and vmapped by ``core.sweep``.
 
     X/y/mask: (H, Dmax, ...) for the scheduled cohort; sizes: (H,) D_n;
-    assign: (H,) edge ids. Returns new global params."""
+    assign: (H,) edge ids. ``agg_kernel=True`` routes eqs. (2)-(3)
+    through the fused masked-weight Pallas kernel (the one-hot + sizes go
+    in raw; the normalised weight panel is built in-kernel, and vmapped
+    callers hit the lane-batched grid). Returns new global params."""
     H = sizes.shape[0]
     onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)      # (H, M)
     w_dev = sizes.astype(jnp.float32)                          # D_n
     edge_tot = onehot.T @ w_dev                                # (M,) D_{N_m}
     has_dev = edge_tot > 0
-    # per-edge normalised device weights: (M, H)
-    w_edge = (onehot.T * w_dev[None, :]) / jnp.maximum(edge_tot, 1.0)[:, None]
+
+    if agg_kernel:
+        from repro.kernels.hier_agg.ops import masked_aggregate
+        # eq. (2): panel built in-kernel from membership rows + sizes
+        edge_aggregate = functools.partial(masked_aggregate, onehot.T, w_dev)
+        # eq. (3) = the same kernel with an all-ones (1, M) mask over the
+        # per-edge cohort sizes D_{N_m} (empty edges weigh 0 already)
+        cloud_aggregate = lambda flat: masked_aggregate(  # noqa: E731
+            jnp.ones((1, M), jnp.float32), edge_tot, flat)[0]
+    else:
+        # per-edge normalised device weights: (M, H)
+        w_edge = (onehot.T * w_dev[None, :]) \
+            / jnp.maximum(edge_tot, 1.0)[:, None]
+        w_cloud = jnp.where(has_dev, edge_tot, 0.0)
+        w_cloud = w_cloud / jnp.maximum(jnp.sum(w_cloud), 1.0)
+        edge_aggregate = lambda flat: w_edge @ flat           # noqa: E731
+        cloud_aggregate = lambda flat: w_cloud @ flat         # noqa: E731
 
     # edge models start from the global model
     edge_params = jax.tree.map(
@@ -67,34 +91,34 @@ def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
                                   edge_params)
         dev_params = cohort_local_sgd(apply_fn, dev_params, X, y, mask, L, lr)
         # (2): weighted average per edge; empty edges keep their model
+        # (aggregate in f32, carry the model dtype through the scan)
         def agg(delta, old):
             flat = delta.reshape(H, -1)
-            new = (w_edge @ flat).reshape((M,) + delta.shape[1:])
+            new = edge_aggregate(flat).reshape((M,) + delta.shape[1:])
             keep = has_dev.reshape((M,) + (1,) * (delta.ndim - 1))
-            return jnp.where(keep, new, old)
+            return jnp.where(keep, new, old).astype(old.dtype)
         new_edge = jax.tree.map(agg, dev_params, edge_params)
         return new_edge, None
 
     edge_params, _ = jax.lax.scan(edge_iter, edge_params, None, length=Q)
 
     # (3): cloud aggregation, weights D_{N_m} (empty edges weight 0)
-    w_cloud = jnp.where(has_dev, edge_tot, 0.0)
-    w_cloud = w_cloud / jnp.maximum(jnp.sum(w_cloud), 1.0)
-
     def cloud_agg(e):
         flat = e.reshape(M, -1)
-        return (w_cloud @ flat).reshape(e.shape[1:])
+        return cloud_aggregate(flat).reshape(e.shape[1:]).astype(e.dtype)
 
     return jax.tree.map(cloud_agg, edge_params)
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q"))
+@functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q",
+                                             "agg_kernel"))
 def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
                          sizes, assign, *, M: int, L: int, Q: int,
-                         lr: float):
+                         lr: float, agg_kernel: bool = False):
     """Jitted Algorithm 1 — see ``hfl_global_iteration_core``."""
     return hfl_global_iteration_core(apply_fn, global_params, X, y, mask,
-                                     sizes, assign, M=M, L=L, Q=Q, lr=lr)
+                                     sizes, assign, M=M, L=L, Q=Q, lr=lr,
+                                     agg_kernel=agg_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

@@ -5,13 +5,11 @@ whole scheduled cohort trains as one vmapped, jitted computation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.cnn import softmax_xent
 
 
 def masked_loss(apply_fn: Callable, params, X, y, mask) -> jnp.ndarray:
@@ -41,5 +39,6 @@ def cohort_local_sgd(apply_fn: Callable, params_per_dev, X, y, mask,
 
     params_per_dev: pytree with leading device axis; X: (H, Dmax, ...).
     """
-    fn = lambda p, xx, yy, mm: local_sgd(apply_fn, p, xx, yy, mm, L, lr)
+    def fn(p, xx, yy, mm):
+        return local_sgd(apply_fn, p, xx, yy, mm, L, lr)
     return jax.vmap(fn)(params_per_dev, X, y, mask)

@@ -12,7 +12,7 @@ assignment, Alg. 2 line 3 assigns devices arbitrarily; we use nearest-edge).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

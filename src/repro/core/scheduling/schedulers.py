@@ -6,7 +6,7 @@ exactly mirroring the paper's set-transfer semantics.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 

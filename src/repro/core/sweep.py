@@ -98,11 +98,12 @@ def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only"))
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
+    "agg_kernel"))
 def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
                 g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
                 assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
-                train_only: bool = False):
+                train_only: bool = False, agg_kernel: bool = False):
     """One fused round for S lanes at once.
 
     Population/data arrays carry a leading lane axis (S, ...); sched_b
@@ -111,20 +112,26 @@ def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
     ``round_step_core``, returning (params_b, (T_i, E_i)) with (S,)
     cost vectors. train_only=True skips resource allocation and cost
     bookkeeping entirely (accuracy-only sweeps like Fig. 3/4) and
-    returns zero costs.
+    returns zero costs. agg_kernel=True routes every lane's Algorithm-1
+    aggregation through the lane-batched ``hier_agg`` Pallas kernel —
+    the vmap hits the kernel's ``custom_vmap`` rule, so all S lanes
+    share ONE (S, P/BP)-grid launch per aggregation instead of falling
+    back to S per-lane interpret calls.
     """
     def one(params, u, D, p, g, g_cloud, B_m, X, y, mask, sizes, sched,
             assign):
         if train_only:
             new_params = hfl_global_iteration_core(
                 apply_fn, params, X[sched], y[sched], mask[sched],
-                sizes[sched], assign, M=M, L=L, Q=Q, lr=lr)
+                sizes[sched], assign, M=M, L=L, Q=Q, lr=lr,
+                agg_kernel=agg_kernel)
             zero = jnp.zeros(())
             return new_params, (zero, zero)
         new_params, (T_i, E_i, _, _, _, _) = round_step_core(
             apply_fn, sp, params, u[sched], D[sched], p[sched], g[sched],
             g_cloud, B_m, X[sched], y[sched], mask[sched], sizes[sched],
-            assign, lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps)
+            assign, lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps,
+            agg_kernel=agg_kernel)
         return new_params, (T_i, E_i)
 
     return jax.vmap(one)(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
@@ -183,9 +190,10 @@ class SweepRunner:
     def __init__(self, sp: cm.SystemParams,
                  worlds: Sequence[Tuple[cm.Population, FederatedData]],
                  *, lr: float = 0.01, alloc_steps: int = 100,
-                 model_seed: int = 0):
+                 model_seed: int = 0, agg_kernel: bool = False):
         assert len(worlds) >= 1
         self.sp, self.lr, self.alloc_steps = sp, lr, alloc_steps
+        self.agg_kernel = agg_kernel
         self.pops = [w[0] for w in worlds]
         self.feds = [w[1] for w in worlds]
         self.S = len(worlds)
@@ -278,7 +286,7 @@ class SweepRunner:
                 self.g_b, self.g_cloud_b, self.B_m_b, self.X_b, self.y_b,
                 self.mask_b, sizes_b, sched_b, assign_b, self.lr,
                 M=self.M, L=sp.L, Q=sp.Q, alloc_steps=self.alloc_steps,
-                train_only=train_only)
+                train_only=train_only, agg_kernel=self.agg_kernel)
             acc = self._eval(params_b)
             accs.append(acc)
             Ts.append(np.asarray(T_i))

@@ -1,1 +1,2 @@
-from repro.kernels.hier_agg.ops import weighted_aggregate  # noqa: F401
+from repro.kernels.hier_agg.ops import (masked_aggregate,  # noqa: F401
+                                        weighted_aggregate)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: hierarchical weighted model aggregation (eqs. 2-3).
+"""Pallas TPU kernels: hierarchical weighted model aggregation (eqs. 2-3).
 
 Edge aggregation is `M edge models = (M x H weight matrix) @ (H devices x
 P parameters)`. P is the full flattened model (10^5..10^9), H ≤ a few
@@ -6,8 +6,29 @@ hundred — so this is a skinny matmul whose bandwidth cost is streaming the
 (H, P) delta matrix through VMEM exactly once. We tile P into 512-lane
 blocks, keep the tiny (Mp, Hp) weight panel resident, and emit f32.
 
-Grid: (P/BP,). Per-step VMEM: Hp*BP + Mp*BP + Mp*Hp f32 ≈ 0.3 MiB.
-The same kernel serves cloud aggregation (M=1 row of edge weights).
+Two kernels, each carrying a leading lane axis S with grid (S, P/BP):
+
+* ``weighted_aggregate_batched_pallas`` — caller-supplied (S, M, H)
+  weight panels. Per-step VMEM: Hp*BP + Mp*BP + Mp*Hp f32 ≈ 0.3 MiB.
+* ``masked_aggregate_batched_pallas`` — the *fused masked-weight*
+  variant: takes the raw assignment one-hot / membership mask (S, M, H)
+  plus per-device data sizes (S, H) and builds the normalised panel
+  ``w = mask·sizes / max(Σ_h mask·sizes, 1)`` INSIDE the kernel, so the
+  round engine never materialises ``w_edge`` separately. The panel costs
+  Mp·Hp VPU flops per grid step — noise next to the Mp·Hp·BP matmul.
+  Cloud aggregation (3) is the same kernel with an all-ones (1, M) mask
+  and the per-edge cohort sizes as ``sizes``.
+
+The unbatched entry points (``weighted_aggregate_pallas`` /
+``masked_aggregate_pallas``) are the S=1 case of the same kernels — one
+kernel body per formula, so tiling/formula changes can't drift between
+copies. ``ops.py`` wires the batched kernels up as the
+``jax.custom_batching.custom_vmap`` rule of the public ops, so a vmapped
+sweep (``core.sweep.SweepRunner``) is ONE kernel launch per round
+instead of S per-lane interpret calls.
+
+Empty edges (all-zero mask rows) produce all-zero output rows — callers
+keep their ``jnp.where(has_dev, new, old)`` fixup outside.
 """
 from __future__ import annotations
 
@@ -21,32 +42,113 @@ BP = 512
 SUB = 8      # f32 sublane multiple
 
 
-def _kernel(w_ref, d_ref, out_ref):
-    w = w_ref[...].astype(jnp.float32)            # (Mp, Hp)
-    d = d_ref[...].astype(jnp.float32)            # (Hp, BP)
-    out_ref[...] = jax.lax.dot_general(
+def _pad2(a, s0, s1):
+    """Pad the trailing two dims up to multiples of (s0, s1)."""
+    pads = [(0, 0)] * (a.ndim - 2)
+    pads += [(0, (-a.shape[-2]) % s0), (0, (-a.shape[-1]) % s1)]
+    return jnp.pad(a, pads)
+
+
+# ------------------------------------------------------- plain weights
+
+def _kernel_batched(w_ref, d_ref, out_ref):
+    w = w_ref[0].astype(jnp.float32)              # (Mp, Hp)
+    d = d_ref[0].astype(jnp.float32)              # (Hp, BP)
+    out_ref[0] = jax.lax.dot_general(
         w, d, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_aggregate_batched_pallas(weights: jnp.ndarray,
+                                      deltas: jnp.ndarray,
+                                      interpret: bool = True) -> jnp.ndarray:
+    """weights: (S, M, H); deltas: (S, H, P) -> (S, M, P) f32, one
+    launch with grid (S, P/BP)."""
+    S, M, H = weights.shape
+    S2, H2, P = deltas.shape
+    assert S == S2 and H == H2
+    wp = _pad2(weights, SUB, SUB)
+    dp = _pad2(deltas, SUB, BP)
+    Mp, Hp = wp.shape[1:]
+    Pp = dp.shape[2]
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=(S, Pp // BP),
+        in_specs=[
+            pl.BlockSpec((1, Mp, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, Hp, BP), lambda s, p: (s, 0, p)),
+        ],
+        out_specs=pl.BlockSpec((1, Mp, BP), lambda s, p: (s, 0, p)),
+        out_shape=jax.ShapeDtypeStruct((S, Mp, Pp), jnp.float32),
+        interpret=interpret,
+    )(wp, dp)
+    return out[:, :M, :P]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def weighted_aggregate_pallas(weights: jnp.ndarray, deltas: jnp.ndarray,
                               interpret: bool = True) -> jnp.ndarray:
-    M, H = weights.shape
-    H2, P = deltas.shape
-    assert H == H2
-    wp = jnp.pad(weights, ((0, (-M) % SUB), (0, (-H) % SUB)))
-    dp = jnp.pad(deltas, ((0, (-H) % SUB), (0, (-P) % BP)))
-    Mp, Hp = wp.shape
-    Pp = dp.shape[1]
+    """weights: (M, H); deltas: (H, P) -> (M, P) f32 — the S=1 lane of
+    the batched kernel (one kernel body to maintain)."""
+    return weighted_aggregate_batched_pallas(weights[None], deltas[None],
+                                             interpret=interpret)[0]
+
+
+# ---------------------------------------------------- fused masked weights
+
+def _masked_kernel_batched(m_ref, s_ref, d_ref, out_ref):
+    m = m_ref[0].astype(jnp.float32)              # (Mp, Hp) membership
+    s = s_ref[0].astype(jnp.float32)              # (SUB, Hp) sizes row 0
+    w = m * s[0][None, :]                         # (Mp, Hp) mask·D_n
+    tot = jnp.sum(w, axis=1, keepdims=True)       # (Mp, 1)  D_{N_m}
+    w = w / jnp.maximum(tot, 1.0)
+    d = d_ref[0].astype(jnp.float32)              # (Hp, BP)
+    out_ref[0] = jax.lax.dot_general(
+        w, d, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_aggregate_batched_pallas(mask: jnp.ndarray, sizes: jnp.ndarray,
+                                    deltas: jnp.ndarray,
+                                    interpret: bool = True) -> jnp.ndarray:
+    """Fused masked-weight aggregation over a lane axis.
+
+    mask: (S, M, H) membership rows; sizes: (S, H) per-device data
+    sizes; deltas: (S, H, P) -> (S, M, P) f32 in ONE launch with grid
+    (S, P/BP) — the ``custom_vmap`` target that keeps vmapped sweeps at
+    one kernel call per round. Output row m is
+    ``Σ_h mask[m,h]·sizes[h]·deltas[h] / max(Σ_h mask[m,h]·sizes[h], 1)``
+    — eq. (2) per edge, and eq. (3) with mask=ones((1, M)), sizes=D_{N_m}.
+    """
+    S, M, H = mask.shape
+    assert sizes.shape == (S, H) and deltas.shape[:2] == (S, H)
+    P = deltas.shape[2]
+    mp = _pad2(mask, SUB, SUB)
+    sp = _pad2(jnp.broadcast_to(sizes[:, None, :], (S, SUB, H)), SUB, SUB)
+    dp = _pad2(deltas, SUB, BP)
+    Mp, Hp = mp.shape[1:]
+    Pp = dp.shape[2]
     out = pl.pallas_call(
-        _kernel,
-        grid=(Pp // BP,),
+        _masked_kernel_batched,
+        grid=(S, Pp // BP),
         in_specs=[
-            pl.BlockSpec((Mp, Hp), lambda p: (0, 0)),
-            pl.BlockSpec((Hp, BP), lambda p: (0, p)),
+            pl.BlockSpec((1, Mp, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, SUB, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, Hp, BP), lambda s, p: (s, 0, p)),
         ],
-        out_specs=pl.BlockSpec((Mp, BP), lambda p: (0, p)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Pp), jnp.float32),
+        out_specs=pl.BlockSpec((1, Mp, BP), lambda s, p: (s, 0, p)),
+        out_shape=jax.ShapeDtypeStruct((S, Mp, Pp), jnp.float32),
         interpret=interpret,
-    )(wp, dp)
-    return out[:M, :P]
+    )(mp, sp, dp)
+    return out[:, :M, :P]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_aggregate_pallas(mask: jnp.ndarray, sizes: jnp.ndarray,
+                            deltas: jnp.ndarray,
+                            interpret: bool = True) -> jnp.ndarray:
+    """mask: (M, H); sizes: (H,); deltas: (H, P) -> (M, P) f32 — the S=1
+    lane of the batched masked kernel (one kernel body to maintain)."""
+    return masked_aggregate_batched_pallas(mask[None], sizes[None],
+                                           deltas[None],
+                                           interpret=interpret)[0]

@@ -1,22 +1,88 @@
-"""jit'd public wrapper for the weighted-aggregation kernel + a pytree
-convenience used by the HFL trainer."""
+"""Public wrappers for the weighted-aggregation kernels.
+
+``weighted_aggregate`` / ``masked_aggregate`` are wrapped in
+``jax.custom_batching.custom_vmap`` whose rule dispatches to the
+lane-batched kernels (grid ``(S, P/BP)``): a ``jax.vmap`` over sweep
+lanes — e.g. ``core.sweep.sweep_round`` vmapping ``round_step_core`` —
+lowers to ONE kernel launch per round instead of falling back to S
+per-lane interpret calls. Unbatched operands (e.g. the constant all-ones
+cloud mask) are broadcast along the lane axis inside the rule.
+
+Interpret mode is resolved at trace time from the backend (interpret
+everywhere but TPU), mirroring the kmeans_dist kernel.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hier_agg.hier_agg import weighted_aggregate_pallas
+from repro.kernels.hier_agg.hier_agg import (
+    masked_aggregate_batched_pallas, masked_aggregate_pallas,
+    weighted_aggregate_batched_pallas, weighted_aggregate_pallas)
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _bcast(x, batched, axis_size):
+    return x if batched else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+
+
+@jax.custom_batching.custom_vmap
+def _weighted_cv(weights: jnp.ndarray, deltas: jnp.ndarray) -> jnp.ndarray:
+    return weighted_aggregate_pallas(weights, deltas,
+                                     interpret=_default_interpret())
+
+
+@_weighted_cv.def_vmap
+def _weighted_cv_rule(axis_size, in_batched, weights, deltas):
+    weights = _bcast(weights, in_batched[0], axis_size)
+    deltas = _bcast(deltas, in_batched[1], axis_size)
+    out = weighted_aggregate_batched_pallas(weights, deltas,
+                                            interpret=_default_interpret())
+    return out, True
+
+
+@jax.custom_batching.custom_vmap
+def _masked_cv(mask: jnp.ndarray, sizes: jnp.ndarray,
+               deltas: jnp.ndarray) -> jnp.ndarray:
+    return masked_aggregate_pallas(mask, sizes, deltas,
+                                   interpret=_default_interpret())
+
+
+@_masked_cv.def_vmap
+def _masked_cv_rule(axis_size, in_batched, mask, sizes, deltas):
+    mask = _bcast(mask, in_batched[0], axis_size)
+    sizes = _bcast(sizes, in_batched[1], axis_size)
+    deltas = _bcast(deltas, in_batched[2], axis_size)
+    out = masked_aggregate_batched_pallas(mask, sizes, deltas,
+                                          interpret=_default_interpret())
+    return out, True
+
+
 def weighted_aggregate(weights: jnp.ndarray, deltas: jnp.ndarray,
                        interpret: bool | None = None) -> jnp.ndarray:
+    """weights: (M, H) panel (rows pre-normalised); deltas: (H, P) ->
+    (M, P) f32. vmap-aware: batched calls hit the (S, P/BP) kernel."""
     if interpret is None:
-        interpret = _default_interpret()
+        return _weighted_cv(weights, deltas)
     return weighted_aggregate_pallas(weights, deltas, interpret=interpret)
+
+
+def masked_aggregate(mask: jnp.ndarray, sizes: jnp.ndarray,
+                     deltas: jnp.ndarray,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Fused masked-weight aggregation (weight panel built in-kernel).
+
+    mask: (M, H) membership rows; sizes: (H,); deltas: (H, P) -> (M, P)
+    f32 rows ``Σ mask·sizes·deltas / max(Σ mask·sizes, 1)``. Empty rows
+    (all-zero mask) come back all-zero. vmap-aware like
+    ``weighted_aggregate``.
+    """
+    if interpret is None:
+        return _masked_cv(mask, sizes, deltas)
+    return masked_aggregate_pallas(mask, sizes, deltas, interpret=interpret)
 
 
 def aggregate_pytrees(weights: jnp.ndarray, device_params,

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the hierarchical weighted-aggregation kernel."""
+"""Pure-jnp oracles for the hierarchical weighted-aggregation kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -9,3 +9,14 @@ def weighted_aggregate_ref(weights: jnp.ndarray,
     """weights: (M, H) aggregation weights (rows already normalised);
     deltas: (H, P) flattened per-device model updates -> (M, P) f32."""
     return weights.astype(jnp.float32) @ deltas.astype(jnp.float32)
+
+
+def masked_aggregate_ref(mask: jnp.ndarray, sizes: jnp.ndarray,
+                         deltas: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused masked-weight variant: builds the normalised
+    (M, H) panel as the einsum path does, then matmuls. mask: (M, H);
+    sizes: (H,); deltas: (H, P) -> (M, P) f32."""
+    w = mask.astype(jnp.float32) * sizes.astype(jnp.float32)[None, :]
+    tot = jnp.sum(w, axis=1, keepdims=True)
+    w = w / jnp.maximum(tot, 1.0)
+    return w @ deltas.astype(jnp.float32)

@@ -25,7 +25,6 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config, variant_for_shape
@@ -139,7 +138,6 @@ def dryrun_hfl(arch: str) -> dict:
     over the pod dimension — a REAL all-reduce over the pod axis."""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.parallel import sharding as shd
 
     mesh = make_production_mesh(multi_pod=True)
     n_pods = mesh.shape["pod"]

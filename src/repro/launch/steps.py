@@ -16,16 +16,13 @@ train_step semantics (HFL mapping):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.models import transformer as T
 from repro.optim import adafactor, adam
 from repro.parallel.sharder import MeshSharder
@@ -169,8 +166,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-4,
         # without the constraint XLA materialises REPLICATED f32 grads
         # (3.5 GB/leaf for llama3-405b; §Perf iteration 3)
         pshard = shd.param_shardings(params, cfg, mesh)
-        pin = lambda tree: jax.tree.map(
-            jax.lax.with_sharding_constraint, tree, pshard)
+        def pin(tree):
+            return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                pshard)
 
         def accum(carry, mb_batch):
             g_acc, l_acc = carry
@@ -235,7 +233,8 @@ def make_hfl_train_step(cfg: ModelConfig, mesh: Mesh, *, lr: float = 1e-4,
         synced = jax.tree.map(
             lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
                                        x.shape), new_pp)
-        pick = lambda a, b: jnp.where(do_cloud_sync, a, b)
+        def pick(a, b):
+            return jnp.where(do_cloud_sync, a, b)
         return jax.tree.map(pick, synced, new_pp)
 
     return hfl_train_step

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, restore_pytree, save_pytree
 from repro.configs.registry import get_config, get_smoke_config

@@ -11,7 +11,7 @@ the non-cached forward (validated in interpret mode on CPU).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,12 +18,12 @@ Layout conventions:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.models.layers import causal_conv1d, dense_init, rmsnorm, rmsnorm_init
 from repro.parallel.sharder import NOOP, Sharder
 
@@ -46,7 +46,8 @@ def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
     nh = s.n_heads(D)
     gn = s.n_groups * s.d_state
     k1, k2, k3, k4, k5, k6, k7, k8, k9 = jax.random.split(key, 9)
-    conv = lambda k, c: (jax.random.normal(k, (c, s.conv_width)) * 0.1).astype(dtype)
+    def conv(k, c):
+        return (jax.random.normal(k, (c, s.conv_width)) * 0.1).astype(dtype)
     return {
         "wz": dense_init(k1, D, di, dtype),
         "wx": dense_init(k2, D, di, dtype),

@@ -11,8 +11,7 @@ pytrees. ``update(grads, state, params) -> (new_params, new_state)``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

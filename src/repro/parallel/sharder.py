@@ -8,10 +8,9 @@ mesh dependence, while ``MeshSharder`` applies
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 
 class Sharder:

@@ -28,11 +28,9 @@ long_500k decode).
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

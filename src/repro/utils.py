@@ -2,8 +2,7 @@
 from __future__ import annotations
 
 import functools
-import math
-from typing import Any, Callable, Iterable
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -54,17 +53,17 @@ def tree_norm(tree: Pytree):
 
 
 def tree_size(tree: Pytree) -> int:
-    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
 
 
 def tree_bytes(tree: Pytree) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
 def tree_flatten_to_vector(tree: Pytree) -> jnp.ndarray:
     """Concatenate all leaves into a single f32 vector (for clustering)."""
     leaves = jax.tree.leaves(tree)
-    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
 
 
 def tree_cast(tree: Pytree, dtype) -> Pytree:

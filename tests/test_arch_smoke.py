@@ -2,7 +2,6 @@
 and one train step on CPU; output shapes + no NaNs (deliverable f)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config

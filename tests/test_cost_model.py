@@ -1,6 +1,5 @@
 """Cost model (eqs. 4-14): units, monotonicity, structure — incl. hypothesis
 property tests on the system's invariants."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,10 +1,8 @@
 """Data substrate: synthetic datasets, non-IID partition, pipelines."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.data import (batch_iterator, make_dataset, partition_noniid,
-                        sample_batch)
+from repro.data import batch_iterator, make_dataset, partition_noniid
 from repro.data.pipeline import token_batch_iterator
 
 

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.cost_model import SystemParams
-from repro.drl.bilstm import bilstm_encode, bilstm_init, lstm_scan, lstm_init
+from repro.drl.bilstm import bilstm_encode, bilstm_init
 from repro.drl.d3qn import d3qn_init, q_values_all_t
 from repro.drl.replay import EpisodeReplay
 

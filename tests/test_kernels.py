@@ -6,8 +6,10 @@ import pytest
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.hier_agg.ops import weighted_aggregate, aggregate_pytrees
-from repro.kernels.hier_agg.ref import weighted_aggregate_ref
+from repro.kernels.hier_agg.ops import (aggregate_pytrees, masked_aggregate,
+                                        weighted_aggregate)
+from repro.kernels.hier_agg.ref import (masked_aggregate_ref,
+                                        weighted_aggregate_ref)
 from repro.kernels.kmeans_dist.ops import pairwise_sq_dists
 from repro.kernels.kmeans_dist.ref import pairwise_sq_dists_ref
 
@@ -57,6 +59,92 @@ def test_hier_agg_sweep(M, H, P, dtype):
     tol = 1e-4 if dtype == jnp.float32 else 0.05
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol)
+
+
+def _one_hot_mask(rng, M, H, empty=()):
+    """(M, H) membership rows from a random assignment; ``empty`` edges
+    get their devices reassigned so their rows are all-zero."""
+    assign = rng.integers(0, M, H)
+    for m in empty:
+        assign[assign == m] = (m + 1) % M
+    return (assign[None, :] == np.arange(M)[:, None]).astype(np.float32)
+
+
+@pytest.mark.parametrize("M,H,P", [
+    (5, 50, 114383),    # paper shape, unaligned everything
+    (3, 13, 257),       # non-multiple-of-8 M and H
+    (1, 3, 17),         # single edge (the cloud-aggregation layout)
+    (8, 128, 4096),     # exact tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_agg_sweep(M, H, P, dtype):
+    """Fused masked-weight kernel == einsum oracle that materialises the
+    normalised (M, H) weight panel."""
+    rng = np.random.default_rng(0)
+    mask = _one_hot_mask(rng, M, H)
+    sizes = jnp.asarray(rng.uniform(10, 100, H).astype(np.float32))
+    d = jax.random.normal(KEY, (H, P), dtype)
+    out = masked_aggregate(jnp.asarray(mask), sizes, d, interpret=True)
+    ref = masked_aggregate_ref(jnp.asarray(mask), sizes, d)
+    tol = 1e-4 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_masked_agg_empty_edges():
+    """All-zero one-hot rows (edges with no scheduled devices) produce
+    all-zero output rows — the engine's has_dev fixup then keeps the old
+    edge model."""
+    rng = np.random.default_rng(1)
+    M, H, P = 6, 30, 1037
+    mask = _one_hot_mask(rng, M, H, empty=(2, 5))
+    sizes = jnp.asarray(rng.uniform(10, 100, H).astype(np.float32))
+    d = jax.random.normal(KEY, (H, P), jnp.float32)
+    out = np.asarray(masked_aggregate(jnp.asarray(mask), sizes, d,
+                                      interpret=True))
+    ref = np.asarray(masked_aggregate_ref(jnp.asarray(mask), sizes, d))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    assert np.all(out[2] == 0.0) and np.all(out[5] == 0.0)
+    assert np.any(out[0] != 0.0)
+
+
+def test_masked_agg_vmapped_lanes():
+    """vmap over a lane axis hits the (S, P/BP) batched kernel via the
+    custom_vmap rule and matches per-lane oracles — including unbatched
+    operands (the constant cloud mask case), which the rule broadcasts."""
+    rng = np.random.default_rng(2)
+    S, M, H, P = 3, 5, 26, 700
+    masks = np.stack([_one_hot_mask(rng, M, H) for _ in range(S)])
+    sizes = rng.uniform(10, 100, (S, H)).astype(np.float32)
+    d = np.asarray(jax.random.normal(KEY, (S, H, P), jnp.float32))
+    out = jax.vmap(masked_aggregate)(jnp.asarray(masks), jnp.asarray(sizes),
+                                     jnp.asarray(d))
+    ref = np.stack([np.asarray(masked_aggregate_ref(
+        jnp.asarray(masks[s]), jnp.asarray(sizes[s]), jnp.asarray(d[s])))
+        for s in range(S)])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+    # unbatched mask/sizes closed over, only deltas vmapped
+    m0, s0 = jnp.asarray(masks[0]), jnp.asarray(sizes[0])
+    out2 = jax.vmap(lambda dd: masked_aggregate(m0, s0, dd))(jnp.asarray(d))
+    ref2 = np.stack([np.asarray(masked_aggregate_ref(m0, s0,
+                                                     jnp.asarray(d[s])))
+                     for s in range(S)])
+    np.testing.assert_allclose(np.asarray(out2), ref2, rtol=1e-4, atol=1e-4)
+
+
+def test_weighted_agg_vmapped_lanes():
+    """The plain-panel kernel is batch-aware too (one launch per round
+    for pre-normalised weight panels under vmap)."""
+    S, M, H, P = 2, 4, 19, 513
+    k1, k2 = jax.random.split(KEY)
+    w = jax.random.uniform(k1, (S, M, H), jnp.float32)
+    w = w / w.sum(axis=-1, keepdims=True)
+    d = jax.random.normal(k2, (S, H, P), jnp.float32)
+    out = jax.jit(jax.vmap(weighted_aggregate))(w, d)
+    ref = np.stack([np.asarray(weighted_aggregate_ref(w[s], d[s]))
+                    for s in range(S)])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
 
 
 def test_hier_agg_pytrees_matches_manual():

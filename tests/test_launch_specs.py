@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import (ARCH_IDS, get_config, get_smoke_config,

@@ -1,7 +1,6 @@
 """Resource allocation (problem 27): optimality vs grid search, feasibility."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import cost_model as cm
 from repro.core import resource as ra

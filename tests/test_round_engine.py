@@ -116,6 +116,108 @@ def test_fused_round_step_matches_sequential_components():
                                atol=1e-7)
 
 
+def _toy_round_inputs(seed=4, H=12, M=3, Dmax=6):
+    sp = cm.SystemParams(n_devices=H, n_edges=M)
+    pop = cm.sample_population(sp, seed=seed)
+    rng = np.random.default_rng(seed)
+    sched = np.arange(H)
+    # leave edge M-1 empty: the kernel path must reproduce the einsum
+    # path's empty-edge semantics (edge keeps its model, cloud weight 0)
+    assign = rng.integers(0, M - 1, H)
+    X = jnp.asarray(rng.normal(0, 1, (H, Dmax, 2, 2, 1)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, (H, Dmax)).astype(np.int32))
+    mask = jnp.ones((H, Dmax), jnp.float32)
+    w0 = {"w": jnp.asarray(rng.normal(0, 0.1, (4, 3)).astype(np.float32))}
+    return sp, pop, sched, assign, X, y, mask, w0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hfl_iteration_agg_kernel_matches_einsum(dtype):
+    """Algorithm 1 with agg_kernel=True == the einsum oracle, including
+    an empty edge and both model dtypes."""
+    sp, pop, sched, assign, X, y, mask, w0 = _toy_round_inputs()
+    w0 = {"w": w0["w"].astype(dtype)}
+    outs = {}
+    for ak in (False, True):
+        w = hfl_global_iteration(_linear_apply, w0, X.astype(dtype), y,
+                                 mask, pop.D[sched], jnp.asarray(assign),
+                                 M=3, L=2, Q=2, lr=0.05, agg_kernel=ak)
+        outs[ak] = np.asarray(w["w"], np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 0.03
+    np.testing.assert_allclose(outs[True], outs[False], rtol=tol, atol=tol)
+
+
+def test_round_step_agg_kernel_matches_einsum_oracle():
+    """Fused round_step with the Pallas aggregation backend == the
+    einsum backend on trained params AND the cost outputs (which must be
+    untouched by the aggregation route)."""
+    sp, pop, sched, assign, X, y, mask, w0 = _toy_round_inputs()
+    outs = {}
+    for ak in (False, True):
+        w, (T_i, E_i, _, _, b, f) = round_step(
+            _linear_apply, sp, w0, pop.u[sched], pop.D[sched],
+            pop.p[sched], pop.g[sched], pop.g_cloud, pop.B_m, X, y, mask,
+            pop.D[sched], jnp.asarray(assign), 0.05, M=3, L=2, Q=2,
+            alloc_steps=ALLOC_STEPS, agg_kernel=ak)
+        outs[ak] = (np.asarray(w["w"]), float(T_i), float(E_i),
+                    np.asarray(b), np.asarray(f))
+    np.testing.assert_allclose(outs[True][0], outs[False][0],
+                               rtol=1e-5, atol=1e-6)
+    # the cost subgraph is identical, but the two agg_kernel traces are
+    # separate XLA compilations — tight tolerance, not bitwise equality
+    np.testing.assert_allclose(outs[True][1], outs[False][1], rtol=1e-6)
+    np.testing.assert_allclose(outs[True][2], outs[False][2], rtol=1e-6)
+    np.testing.assert_allclose(outs[True][3], outs[False][3],
+                               rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(outs[True][4], outs[False][4], rtol=1e-6)
+
+
+def test_sweep_round_agg_kernel_vmapped_lanes():
+    """The vmapped multi-lane round with agg_kernel=True (one lane-
+    batched kernel launch per aggregation) == the einsum lanes."""
+    from repro.core.sweep import sweep_round
+    sp, pop, sched, assign, X, y, mask, w0 = _toy_round_inputs()
+    S = 2
+    rng = np.random.default_rng(11)
+    stack = lambda a: jnp.stack([jnp.asarray(a)] * S)  # noqa: E731
+    params_b = {"w": jnp.asarray(
+        rng.normal(0, 0.1, (S, 4, 3)).astype(np.float32))}
+    assign_b = jnp.asarray(np.stack([assign,
+                                     rng.integers(0, 3, len(sched))]))
+    args = (_linear_apply, sp, params_b, stack(pop.u), stack(pop.D),
+            stack(pop.p), stack(pop.g), stack(pop.g_cloud), stack(pop.B_m),
+            stack(X), stack(y), stack(mask), stack(pop.D), stack(sched),
+            assign_b, 0.05)
+    kw = dict(M=3, L=2, Q=2, alloc_steps=60)
+    p_k, (T_k, E_k) = sweep_round(*args, **kw, agg_kernel=True)
+    p_e, (T_e, E_e) = sweep_round(*args, **kw, agg_kernel=False)
+    np.testing.assert_allclose(np.asarray(p_k["w"]), np.asarray(p_e["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(T_k), np.asarray(T_e), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(E_k), np.asarray(E_e), rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_sweep_runner_agg_kernel_matches_einsum(small_world):
+    """End-to-end SweepRunner lane sweep: agg_kernel=True reproduces the
+    einsum runner's accuracy/cost trajectories at fixed seeds."""
+    sp, pop, fed = small_world
+    from repro.core.scheduling import FedAvgScheduler
+    outs = {}
+    for ak in (False, True):
+        runner = SweepRunner(sp, [(pop, fed), (pop, fed)], lr=0.01,
+                             alloc_steps=50, model_seed=0, agg_kernel=ak)
+        scheds = [FedAvgScheduler(fed.n_devices, 8) for _ in range(2)]
+        outs[ak] = runner.run(scheds, n_rounds=2, assign="geo",
+                              seeds=[0, 1])
+    np.testing.assert_allclose(outs[True]["acc"], outs[False]["acc"],
+                               atol=1e-6)
+    np.testing.assert_allclose(outs[True]["T_i"], outs[False]["T_i"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(outs[True]["E_i"], outs[False]["E_i"],
+                               rtol=1e-6)
+
+
 @pytest.mark.slow
 def test_fused_framework_round_matches_sequential_record(small_world):
     """Framework-level regression: engine='fused' reproduces the

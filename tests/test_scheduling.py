@@ -1,7 +1,6 @@
 """Scheduling (Algs 3-4): constraints (15e)/(15f), cluster balance, and the
 IKC no-repeat rotation property — with hypothesis over random clusterings."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduling import FedAvgScheduler, IKCScheduler, VKCScheduler

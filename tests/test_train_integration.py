@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import InputShape
 from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import token_batch_iterator
 from repro.launch import steps as S
