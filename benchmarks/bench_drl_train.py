@@ -1,0 +1,138 @@
+"""Micro-benchmark: serial vs batched D3QN episode engine (Alg. 5).
+
+Times D3QN training episodes/sec under both engines at identical
+per-episode workloads (same HFEL imitation budget, allocator steps and
+minibatch size):
+
+  * ``engine="serial"`` — one population, one HFEL target search, one
+    ε-greedy pass and one optimizer step per episode;
+  * ``engine="batched"`` — waves of E episodes: one
+    ``sample_population_batch``, lockstep HFEL searches
+    (``assign_batch``: all populations' candidate edges in ONE
+    ``allocate_batch_warm`` dispatch per wave round), one jitted acting
+    pass and one jitted ``lax.scan`` of E TD updates per wave.
+
+Cases: the Fig.-5 training shape (M=5, H=20) and a paper-scale point
+(M=10, H=50). Emits CSV lines (benchmarks.common.emit) and writes
+``BENCH_drl_train.json`` so future PRs can track the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_drl_train [--smoke]
+
+``--smoke`` runs a tiny shape with a tiny budget and only asserts the
+benchmark runs end-to-end and emits valid JSON (CI guard, no timing
+claims).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core.cost_model import SystemParams
+from repro.drl.train import D3QNTrainer
+
+CASES = (
+    # name, M, H, measured episodes (a multiple of WAVE_SIZE, so the
+    # batched timing covers whole waves at the compiled shapes)
+    ("fig5", 5, 20, 64),
+    ("paper", 10, 50, 32),
+)
+WAVE_SIZE = 32
+HFEL_TRANSFER = 40
+HFEL_EXCHANGE = 80
+ALLOC_STEPS = 60
+MINIBATCH = 96
+HIDDEN = 64
+
+
+def _episodes_per_sec(engine: str, sp: SystemParams, H: int,
+                      episodes: int, warmup: int, **kw) -> float:
+    """Train ``warmup`` episodes (compile-bearing, untimed) then time
+    ``episodes`` more; returns episodes/sec."""
+    tr = D3QNTrainer(sp, H=H, engine=engine, seed=0, **kw)
+    tr.train(max_episodes=warmup, verbose=False)
+    t0 = time.perf_counter()
+    tr.train(max_episodes=episodes, verbose=False)
+    return episodes / (time.perf_counter() - t0)
+
+
+def run(out_json: str = "BENCH_drl_train.json", cases=CASES,
+        wave_size: int = WAVE_SIZE, hfel_transfer: int = HFEL_TRANSFER,
+        hfel_exchange: int = HFEL_EXCHANGE, alloc_steps: int = ALLOC_STEPS,
+        minibatch: int = MINIBATCH, hidden: int = HIDDEN,
+        check_speedup: bool = True):
+    results = {}
+    for name, M, H, episodes in cases:
+        sp = SystemParams(n_devices=H, n_edges=M, lam=1.0)
+        kw = dict(hidden=hidden, hfel_transfer=hfel_transfer,
+                  hfel_exchange=hfel_exchange, alloc_steps=alloc_steps,
+                  minibatch=minibatch)
+        # warmup covers buffer fill + every compiled shape (one full
+        # wave warms acting, the update scan and the search rounds)
+        warmup = max(wave_size, 2 * (minibatch // H) + 2)
+        assert episodes % wave_size == 0, \
+            "measured episodes must be whole waves"
+        eps_ser = _episodes_per_sec("serial", sp, H, episodes, warmup,
+                                    **kw)
+        eps_bat = _episodes_per_sec("batched", sp, H, episodes, warmup,
+                                    wave_size=wave_size, **kw)
+        case = {
+            "M": M, "H": H, "episodes": episodes,
+            "serial_eps_per_s": eps_ser, "batched_eps_per_s": eps_bat,
+            "speedup": eps_bat / eps_ser,
+        }
+        results[name] = case
+        emit(f"drl_train/serial_{name}", 1e6 / eps_ser,
+             f"M={M};H={H};budget={hfel_transfer}+{hfel_exchange};"
+             f"eps_per_s={eps_ser:.2f}")
+        emit(f"drl_train/batched_{name}", 1e6 / eps_bat,
+             f"E={wave_size};speedup={case['speedup']:.1f}x;"
+             f"eps_per_s={eps_bat:.2f}")
+
+    payload = {
+        "wave_size": wave_size, "hfel_transfer": hfel_transfer,
+        "hfel_exchange": hfel_exchange, "alloc_steps": alloc_steps,
+        "minibatch": minibatch, "hidden": hidden, "cases": results,
+    }
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(payload, fh, indent=1)
+
+    if check_speedup:
+        fig5 = results["fig5"]
+        emit("drl_train/claim_batched_3x", 0.0,
+             f"pass={fig5['speedup'] >= 3.0};"
+             f"speedup={fig5['speedup']:.1f}x")
+    return payload
+
+
+def run_smoke(out_json: str = "results/BENCH_drl_train_smoke.json"):
+    """Tiny-shape CI guard: runs end-to-end, validates the emitted JSON."""
+    result = run(out_json=out_json, cases=(("fig5", 3, 8, 4),),
+                 wave_size=4, hfel_transfer=4, hfel_exchange=6,
+                 alloc_steps=20, minibatch=16, hidden=16,
+                 check_speedup=False)
+    with open(out_json) as fh:
+        loaded = json.load(fh)
+    assert loaded["cases"]["fig5"]["serial_eps_per_s"] > 0
+    assert loaded["cases"]["fig5"]["batched_eps_per_s"] > 0
+    assert result["wave_size"] == 4
+    emit("drl_train/smoke", 0.0, "pass=True")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; assert-runs-and-emits-JSON only")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,12 +12,14 @@ from repro.core.cost_model import SystemParams
 from repro.drl.train import D3QNTrainer
 
 
-def run(episodes: int = 400, H: int = 20, out_json="results/fig5.json"):
+def run(episodes: int = 400, H: int = 20, out_json="results/fig5.json",
+        engine: str = "batched"):
     sp = SystemParams(n_edges=5, lam=1.0)
     t0 = time.perf_counter()
     tr = D3QNTrainer(sp, H=H, hidden=128, hfel_transfer=40, hfel_exchange=80,
                      alloc_steps=60, minibatch=96,
-                     eps_decay_episodes=episodes // 2, seed=0)
+                     eps_decay_episodes=episodes // 2, seed=0,
+                     engine=engine)
     hist = tr.train(max_episodes=episodes, log_every=50, verbose=False)
     wall = time.perf_counter() - t0
     window = 50

@@ -6,9 +6,9 @@ Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
 reduced scale by default (CPU container); EXPERIMENTS.md records the
 scale factors and validates the paper's *relative* claims. ``--smoke``
 restricts to the perf-tracking micro-benchmarks (engine / hfel /
-hier_agg) at their tiny CI shapes — the bench-smoke CI job runs exactly
+hier_agg / drl_train) at their tiny CI shapes — the bench-smoke CI job runs exactly
 that and uploads the ``results/*.json`` outputs as artifacts. ``--perf``
-runs the same three at full scale but writes the JSON under
+runs the same four at full scale but writes the JSON under
 ``results/`` (gitignored), so the weekly CI job's artifacts are always
 freshly produced files, never the committed repo-root ``BENCH_*.json``.
 
@@ -47,7 +47,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
-                         "engine|hfel|hier_agg")
+                         "engine|hfel|hier_agg|drl_train")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     ap.add_argument("--smoke", action="store_true",
@@ -114,6 +114,10 @@ def main() -> None:
         from benchmarks import bench_hier_agg
         _perf_bench(bench_hier_agg, "hier_agg")
 
+    def run_drl_train():
+        from benchmarks import bench_drl_train
+        _perf_bench(bench_drl_train, "drl_train")
+
     # fig6 reuses fig5's trained D3QN when both are selected, so order
     # matters: fig5 before fig6
     suites = [
@@ -127,9 +131,10 @@ def main() -> None:
         ("engine", run_engine),
         ("hfel", run_hfel),
         ("hier_agg", run_hier_agg),
+        ("drl_train", run_drl_train),
     ]
     if args.smoke or args.perf:
-        perf_names = ("engine", "hfel", "hier_agg")
+        perf_names = ("engine", "hfel", "hier_agg", "drl_train")
         suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]

@@ -1,15 +1,22 @@
-"""Deployment wrapper: assign devices with a trained D3QN agent (greedy)."""
+"""Deployment wrapper: assign devices with a trained D3QN agent (greedy).
+
+Q evaluation goes through the module-level jitted entry points in
+``repro.drl.d3qn`` (shared with the trainer), so every ``DRLAssigner``
+instance reuses one compiled program per input shape instead of
+re-jitting per instance. ``assign_batch`` is the multi-population path:
+E populations' greedy assignments in ONE dispatch (the fig6 benchmark
+and multi-lane sweeps ride it).
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.drl.d3qn import q_values_all_t
+from repro.drl.d3qn import q_values_all_t_jit, q_values_batch_jit
 
 
 @dataclasses.dataclass
@@ -17,12 +24,25 @@ class DRLAssigner:
     sp: cm.SystemParams
     params: dict                   # trained D3QN parameters
 
-    def __post_init__(self):
-        self._q = jax.jit(q_values_all_t)
-
     def assign(self, pop: cm.Population, sched_idx,
                rng=None) -> Tuple[np.ndarray, None]:
         from repro.drl.train import drl_features
         feats = drl_features(pop, sched_idx)
-        q = np.asarray(self._q(self.params, jnp.asarray(feats)))
+        q = np.asarray(q_values_all_t_jit(self.params, jnp.asarray(feats)))
+        return q.argmax(axis=-1), None
+
+    def assign_batch(self, pops, sched_idx=None,
+                     rng=None) -> Tuple[np.ndarray, None]:
+        """Greedy assignments for E populations in one dispatch.
+
+        pops: a ``cost_model.PopulationBatch`` or a sequence of
+        same-shape ``Population``s; sched_idx: shared (H,) indices,
+        per-population (E, H), or None for all devices. Returns
+        ((E, H) edge ids, None) — row e equals ``assign(pops[e], ...)``.
+        """
+        from repro.drl.train import drl_features_batch
+        popb = (pops if isinstance(pops, cm.PopulationBatch)
+                else cm.PopulationBatch.stack(pops))
+        feats = drl_features_batch(popb, sched_idx)
+        q = np.asarray(q_values_batch_jit(self.params, jnp.asarray(feats)))
         return q.argmax(axis=-1), None

@@ -66,9 +66,8 @@ def _objective(Tv, Ev, T_cl, E_cl, lam):
     return (Ev + E_cl).sum(-1) + lam * (Tv + T_cl).max(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("accept_top",))
-def _accept_scan(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
-                 *, accept_top: int):
+def _accept_scan_core(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
+                      *, accept_top: int):
     """Vectorised accept pass over one round's candidates, sorted by J.
 
     Replaces the host-side Python loop over ≤K moves with ONE jitted
@@ -113,6 +112,23 @@ def _accept_scan(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
     return T, E, cur, acc, car
 
 
+_accept_scan = functools.partial(jax.jit, static_argnames=("accept_top",))(
+    _accept_scan_core)
+
+
+@functools.partial(jax.jit, static_argnames=("accept_top",))
+def _accept_scan_pops(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
+                      *, accept_top: int):
+    """``_accept_scan`` vmapped over a leading population axis: one
+    dispatch commits every episode population's round of a lockstep
+    ``assign_batch`` wave. All inputs gain an (E,) axis (``lam``
+    included, so the vmap axes stay uniform); outputs mirror
+    ``_accept_scan`` with the same leading axis."""
+    return jax.vmap(
+        functools.partial(_accept_scan_core, accept_top=accept_top)
+    )(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid)
+
+
 def _edges_eval_warm(sp, feats, assign, edges, B, steps, tb0, tf0):
     """Resource-allocate a subset of edges in ONE batched jit call.
 
@@ -125,14 +141,14 @@ def _edges_eval_warm(sp, feats, assign, edges, B, steps, tb0, tf0):
     edges = np.asarray(edges)
     k = len(edges)
     H = feats["u"].shape[0]
-    masks = jnp.asarray(np.asarray(assign)[None, :] == edges[:, None])
+    masks = np.asarray(assign)[None, :] == edges[:, None]
     res, (tb, tf) = ra.allocate_batch_warm(
         sp,
-        jnp.broadcast_to(feats["u"], (k, H)),
-        jnp.broadcast_to(feats["D"], (k, H)),
-        jnp.broadcast_to(feats["p"], (k, H)),
-        feats["g"][:, edges].T, jnp.asarray(B)[edges], masks,
-        jnp.asarray(tb0), jnp.asarray(tf0), steps=steps)
+        np.broadcast_to(np.asarray(feats["u"]), (k, H)),
+        np.broadcast_to(np.asarray(feats["D"]), (k, H)),
+        np.broadcast_to(np.asarray(feats["p"]), (k, H)),
+        np.asarray(feats["g"])[:, edges].T, np.asarray(B)[edges], masks,
+        np.asarray(tb0), np.asarray(tf0), steps=steps)
     return (np.asarray(res.T_edge), np.asarray(res.E_edge),
             np.asarray(tb), np.asarray(tf))
 
@@ -149,23 +165,17 @@ def _edges_eval(sp, feats, assign, edges: Sequence[int], B,
     return T, E
 
 
-def _trials_eval(sp, feats, assigns, edges, B, steps: int, tb0, tf0,
-                 pad_to: int = 0):
-    """Solve the affected edges of K candidate moves in ONE batched call.
+def _trial_arrays(feats, assigns, edges, B, tb0, tf0, pad_to: int = 0):
+    """Build one round's padded trial-major allocation inputs.
 
-    assigns: (K, H) candidate assignment per move; edges: (K, E)
-    affected edge ids per move; tb0/tf0: (K, E, H) warm-start iterates
-    (the incumbent solutions of the affected edges — each trial differs
-    from its incumbent by one moved device, so ``steps`` can be a
-    fraction of the cold-start count). Builds the (K, E, H) membership
-    masks, flattens everything to ``allocate_batch``'s flat (K·E, H)
-    trial layout, and unflattens the result back to move-major arrays.
-    ``pad_to > K`` pads the trial axis by repeating rows so every round
-    reuses one compiled (pad_to·E, H) program regardless of how many
-    proposals survived validity filtering.
-
-    Returns (T, E, tb, tf): (K, E) costs excluding cloud constants plus
-    the (K, E, H) final iterates for cache maintenance on accept.
+    assigns: (k, H) candidate assignment per move; edges: (k, E)
+    affected edge ids per move; tb0/tf0: (k, E, H) warm-start iterates.
+    ``pad_to > k`` pads the trial axis by repeating rows so every round
+    shares one compiled (pad_to·E, H) program regardless of how many
+    proposals survived validity filtering. Returns
+    ((u, D, p, g, B_k, masks, tb0, tf0), k) — trial-major arrays in
+    ``flatten_trials`` argument order plus the true (unpadded) trial
+    count.
     """
     assigns = np.asarray(assigns)
     edges = np.asarray(edges)
@@ -177,18 +187,71 @@ def _trials_eval(sp, feats, assigns, edges, B, steps: int, tb0, tf0,
         assigns, edges, tb0, tf0 = map(rep, (assigns, edges, tb0, tf0))
     K, n_aff = edges.shape
     H = assigns.shape[1]
-    masks = jnp.asarray(assigns[:, None, :] == edges[:, :, None])
-    g = jnp.asarray(feats["g"]).T[jnp.asarray(edges)]          # (K, E, H)
-    u = jnp.broadcast_to(feats["u"], (K, n_aff, H))
-    D = jnp.broadcast_to(feats["D"], (K, n_aff, H))
-    p = jnp.broadcast_to(feats["p"], (K, n_aff, H))
-    B_k = jnp.asarray(np.asarray(B)[edges])                    # (K, E)
-    flat = ra.flatten_trials(u, D, p, g, B_k, masks, tb0, tf0)
+    # pure numpy assembly: building trial arrays op-by-op on device costs
+    # one dispatch per op per population — at wave scale (rounds x E pops)
+    # that host overhead was larger than the solves. One transfer happens
+    # at the jitted allocate call instead.
+    masks = assigns[:, None, :] == edges[:, :, None]
+    g = np.asarray(feats["g"]).T[edges]                        # (K, E, H)
+    u = np.broadcast_to(np.asarray(feats["u"]), (K, n_aff, H))
+    D = np.broadcast_to(np.asarray(feats["D"]), (K, n_aff, H))
+    p = np.broadcast_to(np.asarray(feats["p"]), (K, n_aff, H))
+    B_k = np.asarray(B)[edges]                                 # (K, E)
+    return (u, D, p, g, B_k, masks, tb0, tf0), k
+
+
+def _trials_eval(sp, feats, assigns, edges, B, steps: int, tb0, tf0,
+                 pad_to: int = 0):
+    """Solve the affected edges of K candidate moves in ONE batched call.
+
+    Trial-major inputs as in ``_trial_arrays`` (each trial differs from
+    its incumbent by one moved device, so ``steps`` can be a fraction of
+    the cold-start count); everything is flattened to ``allocate_batch``'s
+    flat (K·E, H) layout, solved in one ``allocate_batch_warm`` call and
+    unflattened back to move-major arrays.
+
+    Returns (T, E, tb, tf): (k, E) costs excluding cloud constants plus
+    the (k, E, H) final iterates for cache maintenance on accept.
+    """
+    arrs, k = _trial_arrays(feats, assigns, edges, B, tb0, tf0, pad_to)
+    K, n_aff = arrs[4].shape
+    H = arrs[0].shape[2]
+    flat = ra.flatten_trials(*arrs)
     res, (tb, tf) = ra.allocate_batch_warm(sp, *flat, steps=steps)
     res = ra.unflatten_trials(res, K, n_aff)
     unflat = lambda a: np.asarray(a).reshape(K, n_aff, H)[:k]  # noqa: E731
     return (np.asarray(res.T_edge)[:k], np.asarray(res.E_edge)[:k],
             unflat(tb), unflat(tf))
+
+
+def _edges_eval_warm_pops(sp, feats_e, assign_e, B_e, steps: int, tb0, tf0):
+    """``_edges_eval_warm`` over E populations' full edge sets at once.
+
+    feats_e/assign_e/B_e: per-population cohort dicts, assignments and
+    bandwidths; tb0/tf0: (E, M, H) warm-start iterates. Population e's
+    (M, H) edge problems occupy rows [e·M, (e+1)·M) of the flat batch —
+    ONE ``allocate_batch_warm`` dispatch instead of E. Returns
+    (T (E, M), E (E, M), tb (E, M, H), tf (E, M, H)).
+    """
+    E_pop = len(feats_e)
+    H = feats_e[0]["u"].shape[0]
+    M = len(np.asarray(B_e[0]))
+    edge_ids = np.arange(M)
+    parts = []
+    for feats, assign, B in zip(feats_e, assign_e, B_e):
+        masks = np.asarray(assign)[None, :] == edge_ids[:, None]
+        parts.append((np.broadcast_to(np.asarray(feats["u"]), (M, H)),
+                      np.broadcast_to(np.asarray(feats["D"]), (M, H)),
+                      np.broadcast_to(np.asarray(feats["p"]), (M, H)),
+                      np.asarray(feats["g"]).T, np.asarray(B), masks))
+    cat = [np.concatenate([p[i] for p in parts]) for i in range(6)]
+    res, (tb, tf) = ra.allocate_batch_warm(
+        sp, *cat, np.reshape(tb0, (E_pop * M, H)),
+        np.reshape(tf0, (E_pop * M, H)), steps=steps)
+    return (np.asarray(res.T_edge).reshape(E_pop, M),
+            np.asarray(res.E_edge).reshape(E_pop, M),
+            np.asarray(tb).reshape(E_pop, M, H),
+            np.asarray(tf).reshape(E_pop, M, H))
 
 
 def total_objective(sp: cm.SystemParams, pop: cm.Population, sched_idx,
@@ -253,16 +316,8 @@ class HFELAssigner:
         sched_idx = np.asarray(sched_idx)
         H = len(sched_idx)
         M = pop.n_edges
-        feats = {"u": pop.u[sched_idx], "D": pop.D[sched_idx],
-                 "p": pop.p[sched_idx], "g": pop.g[sched_idx]}
-        B = np.asarray(pop.B_m)
-        T_cl, E_cl = cm.cloud_cost(self.sp, pop.g_cloud)
-        T_cl, E_cl = np.asarray(T_cl), np.asarray(E_cl)
-
-        if init_assign is None:
-            assign = np.asarray(np.argmax(np.asarray(pop.g)[sched_idx], axis=1))
-        else:
-            assign = np.asarray(init_assign).copy()
+        feats, B, T_cl, E_cl, assign = self._cohort(pop, sched_idx,
+                                                    init_assign)
 
         obj = functools.partial(_objective, T_cl=T_cl, E_cl=E_cl,
                                 lam=self.sp.lam)
@@ -271,6 +326,222 @@ class HFELAssigner:
             return self._search_serial(feats, B, obj, assign, rng, H, M)
         return self._search_batched(feats, B, obj, assign, rng, H, M,
                                     T_cl, E_cl)
+
+    def _cohort(self, pop: cm.Population, sched: np.ndarray,
+                init_assign: Optional[np.ndarray]):
+        """Host-side numpy cohort of one population: feature dict,
+        bandwidths, cloud constants and the initial (best-gain or
+        caller-provided) assignment. Numpy throughout so trial-array
+        assembly never pays per-op device dispatches (one transfer at
+        each jitted solve). Shared by ``assign`` and ``assign_batch``
+        so the two engines can never diverge on setup."""
+        g = np.asarray(pop.g)[sched]
+        feats = {"u": np.asarray(pop.u)[sched],
+                 "D": np.asarray(pop.D)[sched],
+                 "p": np.asarray(pop.p)[sched], "g": g}
+        T_cl, E_cl = cm.cloud_cost(self.sp, pop.g_cloud)
+        if init_assign is None:
+            assign = np.asarray(np.argmax(g, axis=1))
+        else:
+            assign = np.asarray(init_assign).copy()
+        return (feats, np.asarray(pop.B_m), np.asarray(T_cl),
+                np.asarray(E_cl), assign)
+
+    # ----------------------------------------- lockstep population waves
+
+    def assign_batch(self, pops, sched_idx, rngs,
+                     init_assigns: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Search E populations' assignments in lockstep waves — the
+        batched imitation-target generator of the D3QN trainer (Alg. 5)
+        and the multi-population path of ``fig6_assignment``.
+
+        pops: a ``cost_model.PopulationBatch`` or a sequence of
+        same-shape ``Population``s; sched_idx: one shared (H,) schedule
+        or per-population (E, H) schedules; rngs: one
+        ``np.random.Generator`` (or int seed) per population, consumed
+        exactly as E independent ``assign`` calls would consume them.
+
+        Under ``search="batched"`` every wave proposes K candidate moves
+        *per population*, solves ALL populations' affected edges in ONE
+        ``allocate_batch_warm`` dispatch (E·K·2 edge problems through
+        ``resource.flatten_trials``) and commits accepts through ONE
+        vmapped accept scan — a wave costs the dispatch count of a
+        single population's round, which is where the batched trainer's
+        episodes/sec comes from. Population e's search visits the same
+        proposals, solves and accepts as ``assign(pops[e], sched,
+        rngs[e])`` (pinned in ``tests/test_drl_engine.py``).
+        ``search="serial"`` falls back to E independent oracle searches.
+
+        Returns (assigns (E, H), objectives (E,)).
+        """
+        if self.search not in ("batched", "serial"):
+            raise ValueError(f"unknown HFEL search engine: {self.search!r}")
+        pop_list = (pops.populations() if hasattr(pops, "populations")
+                    else list(pops))
+        E_pop = len(pop_list)
+        rngs = [r if isinstance(r, np.random.Generator)
+                else np.random.default_rng(r) for r in rngs]
+        sched_idx = np.asarray(sched_idx)
+        if sched_idx.ndim == 1:
+            scheds = np.broadcast_to(sched_idx, (E_pop, len(sched_idx)))
+        else:
+            scheds = sched_idx
+
+        if self.search == "serial":
+            outs = [self.assign(pop, scheds[e], rngs[e],
+                                None if init_assigns is None
+                                else init_assigns[e])
+                    for e, pop in enumerate(pop_list)]
+            return (np.stack([o[0] for o in outs]),
+                    np.array([o[1] for o in outs]))
+
+        H = scheds.shape[1]
+        M = pop_list[0].n_edges
+        K = max(1, int(self.n_candidates))
+        warm = self.warm_steps or max(25, (2 * self.alloc_steps) // 5)
+
+        feats_e, B_e, Tcl_e, Ecl_e, assigns0 = [], [], [], [], []
+        for e, pop in enumerate(pop_list):
+            feats, B, T_cl, E_cl, assign0 = self._cohort(
+                pop, scheds[e],
+                None if init_assigns is None else init_assigns[e])
+            feats_e.append(feats)
+            B_e.append(B)
+            Tcl_e.append(T_cl)
+            Ecl_e.append(E_cl)
+            assigns0.append(assign0)
+
+        # all E*M edges in one full-fidelity cold solve
+        T0, E0, tb0, tf0 = _edges_eval_warm_pops(
+            self.sp, feats_e, assigns0, B_e, self.alloc_steps,
+            np.zeros((E_pop, M, H), np.float32),
+            np.ones((E_pop, M, H), np.float32))
+        states = []
+        for e in range(E_pop):
+            st = _BatchedState(assigns0[e], T0[e], E0[e],
+                               np.array(tb0[e]), np.array(tf0[e]))
+            st.cur = float(_objective(st.T, st.E, Tcl_e[e], Ecl_e[e],
+                                      self.sp.lam))
+            states.append(st)
+        # population-stacked cohort arrays: every wave round assembles
+        # its trial batch with whole-(E, K, 2, ...) numpy ops on these
+        stk = {"u": np.stack([f["u"] for f in feats_e]),
+               "D": np.stack([f["D"] for f in feats_e]),
+               "p": np.stack([f["p"] for f in feats_e]),
+               "gT": np.stack([f["g"].T for f in feats_e]),   # (E, M, H)
+               "B": np.stack(B_e),
+               "Tcl": np.stack(Tcl_e), "Ecl": np.stack(Ecl_e)}
+
+        for kind, budget in ((_TRANSFER, self.n_transfer),
+                             (_EXCHANGE, self.n_exchange)):
+            remaining = int(budget)
+            carries: List[List[tuple]] = [[] for _ in range(E_pop)]
+            while remaining > 0:
+                k = min(K, remaining)
+                remaining -= k
+                moves_e = [self._propose(rngs[e], states[e].assign, H, M,
+                                         k, kind, carries[e])
+                           for e in range(E_pop)]
+                carries = self._round_pops(moves_e, stk, states, K, warm)
+        return (np.stack([st.assign for st in states]),
+                np.array([st.cur for st in states]))
+
+    def _round_pops(self, moves_e, stk, states, K, warm_steps
+                    ) -> List[List[tuple]]:
+        """One lockstep wave round: every population's K candidates
+        solved in a single ``allocate_batch_warm`` dispatch and
+        committed through one vmapped accept scan.
+
+        The trial batch is assembled with whole-array numpy ops over the
+        population-stacked cohort ``stk`` — no per-population device
+        work (at wave scale the op-by-op assembly overhead used to
+        exceed the solves themselves). A population that proposed fewer
+        than K valid moves (or none) pads with incumbent rows that are
+        solved but marked invalid, so every wave shares one compiled
+        program. Returns the per-population carry lists.
+        """
+        E_pop = len(states)
+        H = states[0].assign.shape[0]
+        ns = np.array([len(m) for m in moves_e])
+        cand = np.empty((E_pop, K, H), states[0].assign.dtype)
+        edges = np.zeros((E_pop, K, 2), np.int64)
+        for e, (moves, st) in enumerate(zip(moves_e, states)):
+            cand[e] = st.assign            # padding rows: incumbent, edge 0
+            for i, mv in enumerate(moves):
+                cand[e, i] = _apply_move(st.assign, mv)
+                edges[e, i] = _move_edges(st.assign, mv)
+
+        eE = np.arange(E_pop)[:, None, None]
+        masks = cand[:, :, None, :] == edges[:, :, :, None]     # (E,K,2,H)
+        g = stk["gT"][eE, edges]                                # (E,K,2,H)
+        u = np.broadcast_to(stk["u"][:, None, None, :], masks.shape)
+        D = np.broadcast_to(stk["D"][:, None, None, :], masks.shape)
+        p = np.broadcast_to(stk["p"][:, None, None, :], masks.shape)
+        B_k = stk["B"][eE, edges]                               # (E,K,2)
+        tb0 = np.stack([st.tb for st in states])[eE, edges]     # (E,K,2,H)
+        tf0 = np.stack([st.tf for st in states])[eE, edges]
+
+        def fl(a):                 # (E, K, 2, ...) -> trial-major (E*K, 2, ...)
+            return a.reshape((E_pop * K,) + a.shape[2:])
+
+        flat = ra.flatten_trials(fl(u), fl(D), fl(p), fl(g), fl(B_k),
+                                 fl(masks), fl(tb0), fl(tf0))
+        res, (tb, tf) = ra.allocate_batch_warm(self.sp, *flat,
+                                               steps=warm_steps)
+        Tn = np.asarray(res.T_edge).reshape(E_pop, K, 2)
+        En = np.asarray(res.E_edge).reshape(E_pop, K, 2)
+        tb_n = np.asarray(tb).reshape(E_pop, K, 2, H)
+        tf_n = np.asarray(tf).reshape(E_pop, K, 2, H)
+
+        # score all E*K candidate objectives in one vectorised pass
+        T_inc = np.stack([st.T for st in states])               # (E, M)
+        E_inc = np.stack([st.E for st in states])
+        T2 = np.repeat(T_inc[:, None], K, axis=1)               # (E, K, M)
+        E2 = np.repeat(E_inc[:, None], K, axis=1)
+        kK = np.arange(K)[None, :, None]
+        T2[eE, kK, edges] = Tn
+        E2[eE, kK, edges] = En
+        J = np.asarray(_objective(T2, E2, stk["Tcl"][:, None],
+                                  stk["Ecl"][:, None], self.sp.lam))
+        valid = np.arange(K)[None] < ns[:, None]                # (E, K)
+        J = np.where(valid, J, np.inf)                          # pad rows last
+        order = np.argsort(J, axis=1)
+
+        def srt(a):
+            ix = order.reshape(E_pop, K, *([1] * (a.ndim - 2)))
+            return np.take_along_axis(a, ix, axis=1)
+
+        T_out, E_out, cur, acc, car = _accept_scan_pops(
+            jnp.asarray(np.take_along_axis(J, order, axis=1)),
+            jnp.asarray(srt(edges)), jnp.asarray(srt(Tn)),
+            jnp.asarray(srt(En)), jnp.asarray(T_inc), jnp.asarray(E_inc),
+            jnp.asarray(np.array([st.cur for st in states], np.float32)),
+            jnp.asarray(stk["Tcl"]), jnp.asarray(stk["Ecl"]),
+            jnp.full((E_pop,), self.sp.lam, jnp.float32),
+            jnp.asarray(valid), accept_top=self.accept_top)
+        acc, car = np.asarray(acc), np.asarray(car)
+        T_out, E_out, cur = (np.asarray(T_out), np.asarray(E_out),
+                             np.asarray(cur))
+
+        carries: List[List[tuple]] = []
+        for e in range(E_pop):
+            st = states[e]
+            moves = moves_e[e]
+            carry: List[tuple] = []
+            for pos in range(ns[e]):
+                i = order[e, pos]
+                if acc[e, pos]:
+                    st.assign = _apply_move(st.assign, moves[i])
+                    st.tb[edges[e, i]] = tb_n[e, i]
+                    st.tf[edges[e, i]] = tf_n[e, i]
+                elif car[e, pos]:
+                    carry.append(moves[i])
+            if acc[e, :ns[e]].any():
+                st.T, st.E = T_out[e].copy(), E_out[e].copy()
+                st.cur = float(cur[e])
+            carries.append(carry)
+        return carries
 
     # ------------------------------------------------------ serial oracle
 

@@ -73,6 +73,71 @@ class Population:
             [self.g, self.u[:, None], self.D[:, None], self.p[:, None]], axis=1)
 
 
+@dataclasses.dataclass
+class PopulationBatch:
+    """E stacked IoT populations — the episode axis of the batched D3QN
+    trainer (Alg. 5) and of multi-population assignment searches.
+
+    Every array carries a leading population axis; population ``e`` is
+    bitwise-identical to ``sample_population(sp, seeds[e])`` for the
+    seeds it was built from (pinned in ``tests/test_cost_model.py``), so
+    batched consumers and the per-population serial oracles see the SAME
+    worlds.
+    """
+    u: jnp.ndarray          # (E, N)
+    D: jnp.ndarray          # (E, N)
+    p: jnp.ndarray          # (E, N)
+    f_max: jnp.ndarray      # (E, N)
+    g: jnp.ndarray          # (E, N, M)
+    g_cloud: jnp.ndarray    # (E, M)
+    B_m: jnp.ndarray        # (E, M)
+    dev_pos: np.ndarray     # (E, N, 2) km
+    edge_pos: np.ndarray    # (E, M, 2) km
+
+    @property
+    def n_pops(self) -> int:
+        return self.g.shape[0]
+
+    @property
+    def n_devices(self) -> int:
+        return self.g.shape[1]
+
+    @property
+    def n_edges(self) -> int:
+        return self.g.shape[2]
+
+    def pop(self, e: int) -> Population:
+        """Population ``e`` as a plain (view-sharing) ``Population``."""
+        return Population(u=self.u[e], D=self.D[e], p=self.p[e],
+                          f_max=self.f_max[e], g=self.g[e],
+                          g_cloud=self.g_cloud[e], B_m=self.B_m[e],
+                          dev_pos=self.dev_pos[e], edge_pos=self.edge_pos[e])
+
+    def populations(self) -> list:
+        return [self.pop(e) for e in range(self.n_pops)]
+
+    def features(self) -> jnp.ndarray:
+        """(E, N, M+3) stacked raw per-device feature vectors."""
+        return jnp.concatenate(
+            [self.g, self.u[..., None], self.D[..., None],
+             self.p[..., None]], axis=-1)
+
+    @classmethod
+    def stack(cls, pops) -> "PopulationBatch":
+        """Stack same-shape ``Population``s along a new leading axis."""
+        pops = list(pops)
+        return cls(
+            u=jnp.stack([p.u for p in pops]),
+            D=jnp.stack([p.D for p in pops]),
+            p=jnp.stack([p.p for p in pops]),
+            f_max=jnp.stack([p.f_max for p in pops]),
+            g=jnp.stack([p.g for p in pops]),
+            g_cloud=jnp.stack([p.g_cloud for p in pops]),
+            B_m=jnp.stack([p.B_m for p in pops]),
+            dev_pos=np.stack([p.dev_pos for p in pops]),
+            edge_pos=np.stack([p.edge_pos for p in pops]))
+
+
 def _gain(rng: np.random.Generator, dist_km: np.ndarray, shadow_db: float):
     d = np.maximum(dist_km, 0.01)
     pl_db = 128.1 + 37.6 * np.log10(d)
@@ -100,6 +165,30 @@ def sample_population(sp: SystemParams, seed: int = 0,
         g_cloud=jnp.asarray(_gain(rng, d_mc, sp.shadow_db)),
         B_m=jnp.asarray(rng.uniform(*sp.edge_bw_range, M)),
         dev_pos=dev_pos, edge_pos=edge_pos)
+
+
+def sample_population_batch(sp: SystemParams, n_pops: Optional[int] = None,
+                            seed: int = 0, seeds=None,
+                            d_range: Optional[tuple] = None
+                            ) -> PopulationBatch:
+    """E Table-I populations as one stacked ``PopulationBatch``.
+
+    ``seeds`` gives explicit per-population seeds (the batched D3QN
+    trainer passes the SAME per-episode seed stream the serial oracle
+    draws, so both engines train on identical worlds); otherwise
+    ``n_pops`` seeds are derived from the single ``seed`` via
+    ``np.random.SeedSequence``. Sampling stays per-seed-equivalent to
+    ``sample_population`` — the batching is in the stacked arrays the
+    vectorised consumers (``drl_features_batch``,
+    ``HFELAssigner.assign_batch``, ``DRLAssigner.assign_batch``) ride,
+    not in the host RNG draws.
+    """
+    if seeds is None:
+        if n_pops is None:
+            raise ValueError("sample_population_batch needs n_pops or seeds")
+        seeds = np.random.SeedSequence(seed).generate_state(n_pops)
+    return PopulationBatch.stack(
+        sample_population(sp, seed=int(s), d_range=d_range) for s in seeds)
 
 
 # ------------------------------------------------------- eqs (4)-(8)

@@ -103,7 +103,8 @@ def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
 def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
                 g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
                 assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
-                train_only: bool = False, agg_kernel: bool = False):
+                train_only: bool = False, agg_kernel: bool = False,
+                done_b=None):
     """One fused round for S lanes at once.
 
     Population/data arrays carry a leading lane axis (S, ...); sched_b
@@ -116,26 +117,38 @@ def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
     aggregation through the lane-batched ``hier_agg`` Pallas kernel —
     the vmap hits the kernel's ``custom_vmap`` rule, so all S lanes
     share ONE (S, P/BP)-grid launch per aggregation instead of falling
-    back to S per-lane interpret calls.
+    back to S per-lane interpret calls. done_b: optional (S,) bool mask
+    of lanes that already reached the sweep's accuracy target — a done
+    lane's model is frozen (params pass through unchanged) and it stops
+    accruing training compute (its T_i/E_i come back zero), so finished
+    lanes no longer distort the sweep's cost totals.
     """
+    if done_b is None:
+        done_b = jnp.zeros((sched_b.shape[0],), bool)
+
     def one(params, u, D, p, g, g_cloud, B_m, X, y, mask, sizes, sched,
-            assign):
+            assign, done):
         if train_only:
             new_params = hfl_global_iteration_core(
                 apply_fn, params, X[sched], y[sched], mask[sched],
                 sizes[sched], assign, M=M, L=L, Q=Q, lr=lr,
                 agg_kernel=agg_kernel)
             zero = jnp.zeros(())
-            return new_params, (zero, zero)
-        new_params, (T_i, E_i, _, _, _, _) = round_step_core(
-            apply_fn, sp, params, u[sched], D[sched], p[sched], g[sched],
-            g_cloud, B_m, X[sched], y[sched], mask[sched], sizes[sched],
-            assign, lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps,
-            agg_kernel=agg_kernel)
-        return new_params, (T_i, E_i)
+            T_i, E_i = zero, zero
+        else:
+            new_params, (T_i, E_i, _, _, _, _) = round_step_core(
+                apply_fn, sp, params, u[sched], D[sched], p[sched],
+                g[sched], g_cloud, B_m, X[sched], y[sched], mask[sched],
+                sizes[sched], assign, lr, M=M, L=L, Q=Q,
+                alloc_steps=alloc_steps, agg_kernel=agg_kernel)
+        new_params = jax.tree.map(
+            lambda old, new: jnp.where(done, old, new), params, new_params)
+        return new_params, (jnp.where(done, 0.0, T_i),
+                            jnp.where(done, 0.0, E_i))
 
     return jax.vmap(one)(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
-                         X_b, y_b, mask_b, sizes_b, sched_b, assign_b)
+                         X_b, y_b, mask_b, sizes_b, sched_b, assign_b,
+                         done_b)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))
@@ -171,6 +184,21 @@ def make_hfel_assign(sp: cm.SystemParams, *, n_transfer: int = 40,
     assigner = HFELAssigner(sp, n_transfer=n_transfer,
                             n_exchange=n_exchange, alloc_steps=alloc_steps,
                             search="batched", n_candidates=n_candidates)
+
+    def fn(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
+        return np.asarray(assigner.assign(pop, sched, rng)[0])
+
+    return fn
+
+
+def make_drl_assign(sp: cm.SystemParams, params) -> Callable:
+    """Assignment callable wrapping a trained D3QN agent (greedy) —
+    ``assign="drl"`` in ``SweepRunner.run``. ``params`` is the trained
+    parameter pytree (``D3QNTrainer.params``); Q evaluation goes through
+    the module-level jitted entry shared with the trainer, so all lanes
+    reuse one compiled program."""
+    from repro.core.assignment.drl import DRLAssigner
+    assigner = DRLAssigner(sp, params)
 
     def fn(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
         return np.asarray(assigner.assign(pop, sched, rng)[0])
@@ -231,25 +259,43 @@ class SweepRunner:
             assign: Union[str, Callable] = "geo",
             seeds: Optional[Sequence[int]] = None,
             target_acc: Optional[float] = None,
-            sizes: str = "pop", train_only: bool = False) -> Dict:
+            sizes: str = "pop", train_only: bool = False,
+            drl_params=None) -> Dict:
         """Run n_rounds of all S lanes; lane s uses schedulers[s].
 
         assign: "geo" | "mod" | "hfel" (batched K-candidate search via
-        ``make_hfel_assign``) | callable(pop, sched, rng) -> (H,) edges.
+        ``make_hfel_assign``) | "drl" (greedy trained D3QN agent via
+        ``make_drl_assign``; requires ``drl_params``) |
+        callable(pop, sched, rng) -> (H,) edges.
+        drl_params: trained D3QN parameter pytree
+        (``D3QNTrainer.params``), consumed only by ``assign="drl"``.
         sizes: Algorithm-1 aggregation weights — "pop" (cost-model pop.D,
         HFLFramework semantics) or "fed" (actual federated partition
         sizes, the Fig. 3/4 training-curve semantics).
         train_only=True skips resource allocation / cost bookkeeping
         (T_i, E_i are zeros).
+        Early stop is per lane: a lane that reaches ``target_acc`` is
+        marked done — its model freezes, its assignment search is
+        skipped (the lane reuses its last schedule/assignment) and its
+        T_i/E_i rows are zero from then on — and the loop breaks once
+        every lane is done.
         Returns {"acc": (S, R), "T_i": (S, R), "E_i": (S, R),
         "msg_bits_per_round": float, "iters": (S,) rounds to target_acc
         (or n_rounds), "obj": (S, R)} as numpy arrays.
         """
         assert len(schedulers) == self.S
         if isinstance(assign, str):
-            assign_fn = make_hfel_assign(self.sp,
-                                         alloc_steps=self.alloc_steps) \
-                if assign == "hfel" else ASSIGN_FNS[assign]
+            if assign == "hfel":
+                assign_fn = make_hfel_assign(self.sp,
+                                             alloc_steps=self.alloc_steps)
+            elif assign == "drl":
+                if drl_params is None:
+                    raise ValueError(
+                        "assign='drl' needs drl_params (a trained "
+                        "D3QNTrainer.params pytree)")
+                assign_fn = make_drl_assign(self.sp, drl_params)
+            else:
+                assign_fn = ASSIGN_FNS[assign]
         else:
             assign_fn = assign
         if sizes not in ("pop", "fed"):
@@ -265,8 +311,15 @@ class SweepRunner:
         Ts: List[np.ndarray] = []
         Es: List[np.ndarray] = []
         H = None
+        done = np.zeros(self.S, bool)
+        scheds = [None] * self.S
+        assigns = [None] * self.S
         for _ in range(n_rounds):
-            scheds = [np.asarray(schedulers[s].schedule(rngs[s]))
+            # done lanes are frozen: reuse their last schedule/assignment
+            # instead of spending scheduler rng and assignment search on
+            # a lane that no longer trains.
+            scheds = [scheds[s] if done[s]
+                      else np.asarray(schedulers[s].schedule(rngs[s]))
                       for s in range(self.S)]
             # IKC/VKC lanes can come up short of the nominal cohort when a
             # lane's clustering left clusters empty (K' < K); top the short
@@ -276,8 +329,9 @@ class SweepRunner:
             scheds = [np.asarray(_topup(list(s), self.N, H, rngs[i]))
                       if len(s) < H else s
                       for i, s in enumerate(scheds)]
-            assigns = [np.asarray(assign_fn(self.pops[s], scheds[s],
-                                            rngs[s]))
+            assigns = [assigns[s] if done[s]
+                       else np.asarray(assign_fn(self.pops[s], scheds[s],
+                                                 rngs[s]))
                        for s in range(self.S)]
             sched_b = jnp.asarray(np.stack(scheds))
             assign_b = jnp.asarray(np.stack(assigns))
@@ -286,13 +340,16 @@ class SweepRunner:
                 self.g_b, self.g_cloud_b, self.B_m_b, self.X_b, self.y_b,
                 self.mask_b, sizes_b, sched_b, assign_b, self.lr,
                 M=self.M, L=sp.L, Q=sp.Q, alloc_steps=self.alloc_steps,
-                train_only=train_only, agg_kernel=self.agg_kernel)
+                train_only=train_only, agg_kernel=self.agg_kernel,
+                done_b=jnp.asarray(done))
             acc = self._eval(params_b)
             accs.append(acc)
             Ts.append(np.asarray(T_i))
             Es.append(np.asarray(E_i))
-            if target_acc is not None and np.all(acc >= target_acc):
-                break
+            if target_acc is not None:
+                done = done | (acc >= target_acc)
+                if done.all():
+                    break
 
         acc_a = np.stack(accs, axis=1)                  # (S, R)
         T_a = np.stack(Ts, axis=1)

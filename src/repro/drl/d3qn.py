@@ -33,3 +33,9 @@ def q_values_all_t(params, feats: jnp.ndarray) -> jnp.ndarray:
 
 
 q_values_batch = jax.vmap(q_values_all_t, in_axes=(None, 0))
+
+# Module-level jitted entry points, shared by every consumer (the trainer's
+# greedy/parity paths and the deployment ``DRLAssigner``) so the compiled
+# programs are cached once per shape instead of once per instance.
+q_values_all_t_jit = jax.jit(q_values_all_t)
+q_values_batch_jit = jax.jit(q_values_batch)

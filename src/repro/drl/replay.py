@@ -1,61 +1,128 @@
-"""Episode-granular replay buffer Ω.
+"""Episode-granular replay buffer Ω — preallocated array-backed ring.
 
 Tuples (s_t, a_t, r_t, s_{t+1}) of one episode share the same feature
 sequence, so the buffer stores per-episode (features, actions, rewards)
 and samples minibatches of O tuples as (episode, slot) pairs — the BiLSTM
 encodings are then computed once per sampled episode, not per tuple.
+
+Storage is three preallocated numpy arrays (``(capacity, H, F)`` features,
+``(capacity, H)`` actions/rewards) allocated on the first push, written as
+a ring: ``push_batch`` inserts a whole wave of E episodes in one strided
+write (wraparound handled by index arithmetic, not a Python loop), and
+``sample``/``sample_updates`` draw minibatches with vectorised
+(episode, slot) indexing — no per-episode host loops anywhere, which is
+what lets the batched trainer feed its jitted ``lax.scan`` update wave
+straight from buffer gathers.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Tuple
 
 import numpy as np
 
 
 class EpisodeReplay:
-    def __init__(self, capacity_episodes: int = 2000, seed: int = 0):
+    def __init__(self, capacity_episodes: int = 2000):
         self.capacity = capacity_episodes
-        self.feats: List[np.ndarray] = []
-        self.actions: List[np.ndarray] = []
-        self.rewards: List[np.ndarray] = []
-        self._pos = 0
+        self._feats: np.ndarray | None = None     # (cap, H, F)
+        self._actions: np.ndarray | None = None   # (cap, H)
+        self._rewards: np.ndarray | None = None   # (cap, H)
+        self._n = 0        # episodes currently held (<= capacity)
+        self._pos = 0      # next ring write slot
+
+    def _ensure(self, H: int, F: int) -> None:
+        if self._feats is None:
+            self._feats = np.zeros((self.capacity, H, F), np.float32)
+            self._actions = np.zeros((self.capacity, H), np.int64)
+            self._rewards = np.zeros((self.capacity, H), np.float32)
+        elif self._feats.shape[1:] != (H, F):
+            raise ValueError(
+                f"episode shape {(H, F)} != buffer {self._feats.shape[1:]}")
+
+    @property
+    def H(self) -> int:
+        return 0 if self._feats is None else self._feats.shape[1]
 
     def push(self, feats: np.ndarray, actions: np.ndarray,
              rewards: np.ndarray) -> None:
-        if len(self.feats) < self.capacity:
-            self.feats.append(feats)
-            self.actions.append(actions)
-            self.rewards.append(rewards)
-        else:
-            self.feats[self._pos] = feats
-            self.actions[self._pos] = actions
-            self.rewards[self._pos] = rewards
-        self._pos = (self._pos + 1) % self.capacity
+        """Insert one episode: feats (H, F), actions/rewards (H,)."""
+        self.push_batch(np.asarray(feats)[None], np.asarray(actions)[None],
+                        np.asarray(rewards)[None])
+
+    def push_batch(self, feats: np.ndarray, actions: np.ndarray,
+                   rewards: np.ndarray) -> None:
+        """Insert a wave of E episodes in one ring write.
+
+        feats (E, H, F), actions/rewards (E, H). If E exceeds the
+        capacity only the most recent ``capacity`` episodes land (ring
+        semantics of pushing them one at a time).
+        """
+        feats = np.asarray(feats, np.float32)
+        E, H, F = feats.shape
+        self._ensure(H, F)
+        if E > self.capacity:       # only the tail survives a full lap
+            feats = feats[-self.capacity:]
+            actions = np.asarray(actions)[-self.capacity:]
+            rewards = np.asarray(rewards)[-self.capacity:]
+            self._pos = (self._pos + E) % self.capacity
+            E = self.capacity
+        slots = (self._pos + np.arange(E)) % self.capacity
+        self._feats[slots] = feats
+        self._actions[slots] = np.asarray(actions)
+        self._rewards[slots] = np.asarray(rewards)
+        self._pos = (self._pos + E) % self.capacity
+        self._n = min(self._n + E, self.capacity)
 
     def __len__(self) -> int:
-        return sum(len(a) for a in self.actions)
+        """Total stored tuples (episodes x slots)."""
+        return self._n * self.H
 
     @property
     def n_episodes(self) -> int:
-        return len(self.feats)
+        return self._n
 
     def sample(self, rng: np.random.Generator, n_tuples: int,
                max_episodes: int = 8
-               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Returns (feats (E,H,F), slots (n,), actions (n,), rewards (n,),
-        episode_of_tuple (n,))."""
-        n_ep = min(max_episodes, self.n_episodes)
-        eps = rng.choice(self.n_episodes, n_ep, replace=False)
-        feats = np.stack([self.feats[e] for e in eps])
-        H = feats.shape[1]
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                          np.ndarray]:
+        """One minibatch of ~n_tuples (episode, slot) pairs.
+
+        Returns ``(feats, ep_idx, slots, actions, rewards)``: feats
+        (n_ep, H, F) holds the n_ep <= max_episodes sampled episodes
+        once each; ep_idx/slots (n,) index tuples into that stack;
+        actions/rewards (n,) are the gathered per-tuple values.
+        """
+        feats, ep_idx, slots, actions, rewards = self.sample_updates(
+            rng, 1, n_tuples, max_episodes=max_episodes)
+        return feats[0], ep_idx[0], slots[0], actions[0], rewards[0]
+
+    def sample_updates(self, rng: np.random.Generator, n_updates: int,
+                       n_tuples: int, max_episodes: int = 8
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  np.ndarray, np.ndarray]:
+        """U independent minibatches, stacked for a scanned update wave.
+
+        Returns ``(feats, ep_idx, slots, actions, rewards)`` with a
+        leading (U,) axis on every array — feats (U, n_ep, H, F), the
+        rest (U, n) — ready to be consumed one slice per ``lax.scan``
+        step by the batched trainer. All U draws happen in three
+        vectorised rng calls (episode choice via argsorted uniforms —
+        without-replacement per update — plus one slot and one episode
+        index draw), not U x n_ep host calls.
+        """
+        if self._n == 0:
+            raise ValueError("cannot sample from an empty replay buffer")
+        U = n_updates
+        H = self.H
+        n_ep = min(max_episodes, self._n)
         per = max(1, n_tuples // n_ep)
-        ep_idx, slots = [], []
-        for j in range(n_ep):
-            s = rng.integers(0, H, per)
-            slots.append(s)
-            ep_idx.append(np.full(per, j))
-        slots = np.concatenate(slots)
-        ep_idx = np.concatenate(ep_idx)
-        actions = np.stack([self.actions[e] for e in eps])[ep_idx, slots]
-        rewards = np.stack([self.rewards[e] for e in eps])[ep_idx, slots]
+        # (U, n_ep) distinct episode ids per update
+        eps = np.argsort(rng.random((U, self._n)), axis=1)[:, :n_ep]
+        slots = rng.integers(0, H, (U, n_ep * per))
+        ep_idx = np.repeat(np.arange(n_ep)[None], U, axis=0)
+        ep_idx = np.repeat(ep_idx, per, axis=1)               # (U, n_ep*per)
+        feats = self._feats[eps]                              # (U, n_ep, H, F)
+        rows = np.take_along_axis(eps, ep_idx, axis=1)        # buffer slots
+        actions = self._actions[rows, slots]
+        rewards = self._rewards[rows, slots]
         return feats, ep_idx, slots, actions, rewards

@@ -5,6 +5,26 @@ scheduled; HFEL produces the imitation target Ψ̂; the agent assigns the H
 devices one per time-slot with ε-greedy exploration; rewards are ±1
 (eq. 26); minibatches from the replay buffer train the online network with
 the double-DQN target (eq. 22); the target network syncs every J steps.
+
+Two training engines share the episode semantics:
+
+* ``engine="serial"`` — the literature-faithful loop: one population,
+  one HFEL target search, one ε-greedy pass and one optimizer step per
+  episode. Kept as the parity oracle.
+* ``engine="batched"`` (default) — waves of ``wave_size`` episodes. A
+  wave samples E populations at once (``sample_population_batch``), runs
+  ALL their HFEL target searches in lockstep K-candidate waves
+  (``HFELAssigner.assign_batch`` — one allocator dispatch per round for
+  the whole wave), acts on every episode in one jitted batched pass
+  (``_act_wave``), pushes the wave into the array-backed replay ring in
+  one write, and folds the wave's E TD updates into one jitted
+  ``lax.scan`` (``_update_wave``) with the target-network sync (every J
+  steps) applied inside the scan. Given the same minibatch stream the
+  scan reproduces the serial update loop step-for-step (pinned to float
+  tolerance in ``tests/test_drl_engine.py``); the main semantic
+  difference is that a wave's episodes all sample minibatches from the
+  post-wave buffer, where the serial loop interleaves pushes and draws
+  (see docs/engine.md).
 """
 from __future__ import annotations
 
@@ -18,15 +38,19 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core.assignment.hfel import HFELAssigner
-from repro.drl.d3qn import d3qn_init, q_values_all_t, q_values_batch
+from repro.drl.d3qn import (d3qn_init, q_values_all_t_jit, q_values_batch,
+                            q_values_batch_jit)
 from repro.drl.replay import EpisodeReplay
 from repro.optim import adam
 
+_SEARCH_SEED_XOR = 0x5EED
+
 
 def minmax_normalize(feats: np.ndarray) -> np.ndarray:
-    """eq. (24): per-episode min-max over the H scheduled devices."""
-    lo = feats.min(axis=0, keepdims=True)
-    hi = feats.max(axis=0, keepdims=True)
+    """eq. (24): min-max over the H scheduled devices (axis -2, so one
+    (H, F) episode and a stacked (E, H, F) wave normalise identically)."""
+    lo = feats.min(axis=-2, keepdims=True)
+    hi = feats.max(axis=-2, keepdims=True)
     return (feats - lo) / np.maximum(hi - lo, 1e-12)
 
 
@@ -42,11 +66,42 @@ def drl_features(pop, sched_idx=None) -> np.ndarray:
     return minmax_normalize(feats)
 
 
+def drl_features_batch(popb: cm.PopulationBatch, sched_idx=None
+                       ) -> np.ndarray:
+    """Vectorised ``drl_features``: (E, H, F) agent features for a whole
+    ``PopulationBatch`` in one pass. sched_idx: shared (H,) indices or
+    per-population (E, H); None keeps all devices."""
+    feats = np.asarray(popb.features())
+    if sched_idx is not None:
+        sched_idx = np.asarray(sched_idx)
+        if sched_idx.ndim == 1:
+            feats = feats[:, sched_idx]
+        else:
+            feats = np.take_along_axis(feats, sched_idx[:, :, None], axis=1)
+    M = popb.n_edges
+    feats = feats.copy()
+    feats[..., :M] = 10.0 * np.log10(np.maximum(feats[..., :M], 1e-30))
+    return minmax_normalize(feats)
+
+
+def _training_sp(sp: cm.SystemParams, H: int) -> cm.SystemParams:
+    """Table-I params restricted to a cohort of exactly H devices — the
+    single source of the episode-world shape for BOTH engines."""
+    return dataclasses.replace(sp, n_devices=H)
+
+
 def make_training_population(sp: cm.SystemParams, H: int, seed: int
                              ) -> cm.Population:
     """Random population of exactly H scheduled devices (Alg. 5 line 4)."""
-    sp_h = dataclasses.replace(sp, n_devices=H)
-    return cm.sample_population(sp_h, seed=seed)
+    return cm.sample_population(_training_sp(sp, H), seed=seed)
+
+
+def make_training_population_batch(sp: cm.SystemParams, H: int, seeds
+                                   ) -> cm.PopulationBatch:
+    """Batched ``make_training_population``: E training worlds stacked,
+    world e bitwise-identical to ``make_training_population(sp, H,
+    seeds[e])``."""
+    return cm.sample_population_batch(_training_sp(sp, H), seeds=seeds)
 
 
 @functools.partial(jax.jit, static_argnames=("gamma",))
@@ -67,6 +122,62 @@ def _td_loss(params, target_params, feats, ep_idx, slots, actions, rewards,
     return jnp.mean(jnp.square(y - q_sa))
 
 
+@functools.partial(jax.jit, static_argnames=("lr", "gamma"))
+def _update_one(params, opt_state, target_params, feats, ep_idx, slots,
+                actions, rewards, *, lr: float, gamma: float):
+    """One TD minibatch update (serial oracle's optimizer step).
+
+    Module-level with (lr, gamma) static so every trainer instance
+    shares one compiled program per shape."""
+    opt = adam(lr)
+    loss, grads = jax.value_and_grad(_td_loss)(
+        params, target_params, feats, ep_idx, slots, actions, rewards,
+        gamma)
+    params, opt_state = opt.update(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "gamma", "target_sync"))
+def _update_wave(params, opt_state, target_params, step0, feats_u,
+                 ep_idx_u, slots_u, actions_u, rewards_u, *, lr: float,
+                 gamma: float, target_sync: int):
+    """U TD updates as one ``lax.scan`` — the serial update loop
+    (optimizer step + every-J target sync) folded into a single jitted
+    program. Minibatch arrays carry a leading (U,) axis
+    (``EpisodeReplay.sample_updates``). Module-level with the
+    hyperparameters static, so trainer instances share compilations.
+    """
+    opt = adam(lr)
+
+    def one(carry, mb):
+        params, opt_state, target, step = carry
+        feats, ep_idx, slots, acts, rews = mb
+        loss, grads = jax.value_and_grad(_td_loss)(
+            params, target, feats, ep_idx, slots, acts, rews, gamma)
+        params, opt_state = opt.update(grads, opt_state, params)
+        step = step + 1
+        sync = (step % target_sync == 0)
+        target = jax.tree.map(
+            lambda t, p: jnp.where(sync, p, t), target, params)
+        return (params, opt_state, target, step), loss
+
+    return jax.lax.scan(
+        one, (params, opt_state, target_params, step0),
+        (feats_u, ep_idx_u, slots_u, actions_u, rewards_u))
+
+
+@jax.jit
+def _act_wave(params, feats, rand_actions, explore):
+    """ε-greedy actions for a whole wave in ONE dispatch.
+
+    feats (E, H, F); rand_actions/explore (E, H) host-precomputed
+    exploration draws (the rng stays host-side, like the serial path).
+    """
+    q = q_values_batch(params, feats)
+    greedy = jnp.argmax(q, axis=-1)
+    return jnp.where(explore, rand_actions, greedy)
+
+
 @dataclasses.dataclass
 class D3QNTrainer:
     sp: cm.SystemParams
@@ -83,8 +194,13 @@ class D3QNTrainer:
     hfel_exchange: int = 300
     alloc_steps: int = 120
     seed: int = 0
+    engine: str = "batched"        # "batched" | "serial" (parity oracle)
+    wave_size: int = 8             # E: episodes per batched wave
 
     def __post_init__(self):
+        if self.engine not in ("batched", "serial"):
+            raise ValueError(
+                f"unknown D3QN training engine: {self.engine!r}")
         self.feat_dim = self.sp.n_edges + 3
         key = jax.random.PRNGKey(self.seed)
         self.params = d3qn_init(key, self.feat_dim, self.sp.n_edges,
@@ -100,26 +216,29 @@ class D3QNTrainer:
         self.episode = 0
         self.reward_history: List[float] = []
 
-        @jax.jit
-        def _update(params, opt_state, target_params, feats, ep_idx, slots,
-                    actions, rewards):
-            loss, grads = jax.value_and_grad(_td_loss)(
-                params, target_params, feats, ep_idx, slots, actions,
-                rewards, self.gamma)
-            params, opt_state = self.opt.update(grads, opt_state, params)
-            return params, opt_state, loss
-        self._update = _update
-        self._q_all = jax.jit(q_values_all_t)
+        # bound views of the module-level jitted updates (shared
+        # compilation cache across trainer instances)
+        self._update = functools.partial(_update_one, lr=self.lr,
+                                         gamma=self.gamma)
+        self._update_wave = functools.partial(
+            _update_wave, lr=self.lr, gamma=self.gamma,
+            target_sync=self.target_sync)
 
     # ------------------------------------------------------------ acting
 
-    def epsilon(self) -> float:
-        t = min(1.0, self.episode / self.eps_decay_episodes)
+    def _epsilon_at(self, episode):
+        """Vectorised ε schedule — episode may be an int or an array."""
+        t = np.minimum(1.0, np.asarray(episode, np.float64)
+                       / self.eps_decay_episodes)
         return self.eps_start + (self.eps_end - self.eps_start) * t
+
+    def epsilon(self) -> float:
+        return float(self._epsilon_at(self.episode))
 
     def act_episode(self, feats_norm: np.ndarray, greedy: bool = False
                     ) -> np.ndarray:
-        q = np.asarray(self._q_all(self.params, jnp.asarray(feats_norm)))
+        q = np.asarray(q_values_all_t_jit(self.params,
+                                          jnp.asarray(feats_norm)))
         actions = q.argmax(axis=-1)
         if not greedy:
             eps = self.epsilon()
@@ -128,17 +247,23 @@ class D3QNTrainer:
             actions = np.where(explore, rand, actions)
         return actions.astype(np.int64)
 
+    def act_batch(self, feats_norm: np.ndarray) -> np.ndarray:
+        """Greedy actions for (E, H, F) stacked episodes, one dispatch."""
+        q = np.asarray(q_values_batch_jit(self.params,
+                                          jnp.asarray(feats_norm)))
+        return q.argmax(axis=-1).astype(np.int64)
+
     # ---------------------------------------------------------- training
 
     def run_episode(self) -> Tuple[float, float]:
-        """One Alg. 5 episode; returns (undiscounted return, td loss)."""
+        """One Alg. 5 episode (serial oracle); returns (return, td loss)."""
         pop_seed = int(self.rng.integers(1 << 31))
         pop = make_training_population(self.sp, self.H, seed=pop_seed)
         sched = np.arange(self.H)
         # deterministic search seed per population: HFEL's target pattern
         # is then a (learnable) function of the features, not of rng state
         hfel_assign, _ = self.hfel.assign(
-            pop, sched, np.random.default_rng(pop_seed ^ 0x5EED))
+            pop, sched, np.random.default_rng(pop_seed ^ _SEARCH_SEED_XOR))
         feats = drl_features(pop)
         actions = self.act_episode(feats)
         rewards = np.where(actions == hfel_assign, 1.0, -1.0)
@@ -162,12 +287,81 @@ class D3QNTrainer:
         self.reward_history.append(ret)
         return ret, loss
 
+    def run_wave(self, n_episodes=None) -> Tuple[np.ndarray, float]:
+        """One batched wave of E Alg. 5 episodes.
+
+        Draws E per-episode population seeds from the trainer rng (each
+        world bitwise-identical to the serial engine's for the same
+        seed; the stream *order* differs, since the serial loop
+        interleaves exploration/minibatch draws between seed draws),
+        generates ALL the HFEL imitation targets in lockstep
+        search waves, acts ε-greedily on the whole wave in one jitted
+        pass, pushes the wave into the replay ring in one write, and —
+        once the buffer is warm — applies E TD updates as one jitted
+        ``lax.scan``. Returns (per-episode returns (E,), losses): the
+        losses are the scan's per-update device array (or np.nan before
+        the buffer warms) — left unsynced so the update wave overlaps
+        the next wave's host work; convert when you read it.
+        """
+        E = int(self.wave_size if n_episodes is None else n_episodes)
+        pop_seeds = [int(self.rng.integers(1 << 31)) for _ in range(E)]
+        popb = make_training_population_batch(self.sp, self.H, pop_seeds)
+        targets, _ = self.hfel.assign_batch(
+            popb, np.arange(self.H),
+            [np.random.default_rng(s ^ _SEARCH_SEED_XOR)
+             for s in pop_seeds])
+        feats = drl_features_batch(popb)
+        eps = self._epsilon_at(self.episode + np.arange(E))
+        explore = self.rng.random((E, self.H)) < eps[:, None]
+        rand = self.rng.integers(0, self.sp.n_edges, (E, self.H))
+        actions = np.asarray(_act_wave(
+            self.params, jnp.asarray(feats, jnp.float32),
+            jnp.asarray(rand), jnp.asarray(explore))).astype(np.int64)
+        rewards = np.where(actions == targets, 1.0, -1.0)
+        self.replay.push_batch(feats, actions, rewards)
+        self.episode += E
+        rets = rewards.sum(axis=1)
+        self.reward_history.extend(float(r) for r in rets)
+
+        loss = np.nan
+        if len(self.replay) > self.minibatch:
+            feats_u, ep_idx_u, slots_u, acts_u, rews_u = \
+                self.replay.sample_updates(self.rng, E, self.minibatch)
+            carry, losses = self._update_wave(
+                self.params, self.opt_state, self.target_params,
+                jnp.asarray(self.step, jnp.int32),
+                jnp.asarray(feats_u), jnp.asarray(ep_idx_u),
+                jnp.asarray(slots_u), jnp.asarray(acts_u),
+                jnp.asarray(rews_u, jnp.float32))
+            self.params, self.opt_state, self.target_params, _ = carry
+            # mirror the scan's step counter host-side instead of
+            # blocking on the device value: the scan then runs
+            # asynchronously under the next wave's host-side sampling
+            # and proposal work
+            self.step += E
+            loss = losses          # device array; sync only when read
+        return rets, loss
+
     def train(self, max_episodes: int, log_every: int = 25,
               verbose: bool = True) -> List[float]:
-        for _ in range(max_episodes):
-            ret, loss = self.run_episode()
-            if verbose and self.episode % log_every == 0:
-                avg = float(np.mean(self.reward_history[-50:]))
-                print(f"  episode {self.episode:4d}  eps={self.epsilon():.2f}"
-                      f"  avg50_return={avg:+.1f}  td_loss={loss:.4f}")
+        def log(loss):
+            avg = float(np.mean(self.reward_history[-50:]))
+            print(f"  episode {self.episode:4d}  eps={self.epsilon():.2f}"
+                  f"  avg50_return={avg:+.1f}  td_loss={loss:.4f}")
+
+        if self.engine == "serial":
+            for _ in range(max_episodes):
+                _, loss = self.run_episode()
+                if verbose and self.episode % log_every == 0:
+                    log(loss)
+            return self.reward_history
+
+        done = 0
+        while done < max_episodes:
+            E = min(self.wave_size, max_episodes - done)
+            _, losses = self.run_wave(E)
+            done += E
+            if verbose and (self.episode // log_every) > \
+                    ((self.episode - E) // log_every):
+                log(float(np.mean(np.asarray(losses))))
         return self.reward_history

@@ -22,6 +22,24 @@ def test_population_shapes_and_ranges():
     assert np.all(np.asarray(POP.g) > 0)
 
 
+def test_population_batch_shapes_and_seed_derivation():
+    """sample_population_batch: stacked (E, ...) arrays; one `seed` derives
+    a deterministic population set; `pop(e)` round-trips to Population."""
+    popb = cm.sample_population_batch(SP, n_pops=3, seed=7)
+    E, N, M = 3, SP.n_devices, SP.n_edges
+    assert popb.n_pops == E and popb.n_devices == N and popb.n_edges == M
+    assert popb.g.shape == (E, N, M) and popb.B_m.shape == (E, M)
+    assert popb.features().shape == (E, N, M + 3)
+    popb2 = cm.sample_population_batch(SP, n_pops=3, seed=7)
+    np.testing.assert_array_equal(np.asarray(popb.g), np.asarray(popb2.g))
+    pop1 = popb.pop(1)
+    assert isinstance(pop1, cm.Population)
+    np.testing.assert_array_equal(np.asarray(pop1.features()),
+                                  np.asarray(popb.features()[1]))
+    with pytest.raises(ValueError, match="n_pops or seeds"):
+        cm.sample_population_batch(SP)
+
+
 @given(f=st.floats(1e8, 2e9), u=st.floats(1e4, 1e5), D=st.floats(300, 700))
 @settings(max_examples=50, deadline=None)
 def test_cmp_scaling_properties(f, u, D):

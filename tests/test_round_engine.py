@@ -197,6 +197,52 @@ def test_sweep_round_agg_kernel_vmapped_lanes():
     np.testing.assert_allclose(np.asarray(E_k), np.asarray(E_e), rtol=1e-6)
 
 
+def test_sweep_round_done_mask_freezes_lane():
+    """Per-lane early stop: a done lane's params pass through unchanged
+    and its training-compute costs (T_i, E_i) come back zero, while live
+    lanes are untouched by the mask."""
+    from repro.core.sweep import sweep_round
+    sp, pop, sched, assign, X, y, mask, w0 = _toy_round_inputs()
+    S = 2
+    rng = np.random.default_rng(13)
+    stack = lambda a: jnp.stack([jnp.asarray(a)] * S)  # noqa: E731
+    params_b = {"w": jnp.asarray(
+        rng.normal(0, 0.1, (S, 4, 3)).astype(np.float32))}
+    assign_b = jnp.asarray(np.stack([assign, assign]))
+    args = (_linear_apply, sp, params_b, stack(pop.u), stack(pop.D),
+            stack(pop.p), stack(pop.g), stack(pop.g_cloud), stack(pop.B_m),
+            stack(X), stack(y), stack(mask), stack(pop.D), stack(sched),
+            assign_b, 0.05)
+    kw = dict(M=3, L=2, Q=2, alloc_steps=60)
+    p_all, (T_all, E_all) = sweep_round(*args, **kw)
+    p_msk, (T_msk, E_msk) = sweep_round(
+        *args, **kw, done_b=jnp.asarray([True, False]))
+    # lane 0 frozen: params unchanged, zero costs
+    np.testing.assert_array_equal(np.asarray(p_msk["w"][0]),
+                                  np.asarray(params_b["w"][0]))
+    assert float(T_msk[0]) == 0.0 and float(E_msk[0]) == 0.0
+    # lane 1 live: identical to the unmasked round
+    np.testing.assert_allclose(np.asarray(p_msk["w"][1]),
+                               np.asarray(p_all["w"][1]), rtol=1e-6)
+    np.testing.assert_allclose(float(T_msk[1]), float(T_all[1]), rtol=1e-6)
+    np.testing.assert_allclose(float(E_msk[1]), float(E_all[1]), rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_sweep_runner_per_lane_early_stop(small_world):
+    """target_acc=0 marks every lane done after round 1: the run stops
+    early and later rows never accrue costs (here there are none)."""
+    sp, pop, fed = small_world
+    from repro.core.scheduling import FedAvgScheduler
+    runner = SweepRunner(sp, [(pop, fed), (pop, fed)], lr=0.01,
+                         alloc_steps=50, model_seed=0)
+    scheds = [FedAvgScheduler(fed.n_devices, 8) for _ in range(2)]
+    out = runner.run(scheds, n_rounds=4, assign="geo", seeds=[0, 1],
+                     target_acc=0.0)
+    assert out["acc"].shape == (2, 1)          # stopped after one round
+    np.testing.assert_array_equal(out["iters"], [1, 1])
+
+
 @pytest.mark.slow
 def test_sweep_runner_agg_kernel_matches_einsum(small_world):
     """End-to-end SweepRunner lane sweep: agg_kernel=True reproduces the
