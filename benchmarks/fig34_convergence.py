@@ -21,11 +21,13 @@ from benchmarks.common import REPEATS, emit, make_world
 from repro.core.sweep import SweepRunner, build_scheduler
 
 
-def run(iters: int = 10, h_values=(10, 20), out_json="results/fig34.json"):
+def run(iters: int = 10, h_values=(10, 20), out_json="results/fig34.json",
+        shard: bool = False):
     built = [make_world("fmnist_syn", seed=r) for r in range(REPEATS)]
     sp = built[0][0]
     worlds = [(pop, fed) for _, pop, fed in built]
-    runner = SweepRunner(sp, worlds, lr=0.03, alloc_steps=30, model_seed=0)
+    runner = SweepRunner(sp, worlds, lr=0.03, alloc_steps=30, model_seed=0,
+                         shard=shard)
 
     results = {}
     for H in h_values:
@@ -58,4 +60,11 @@ def run(iters: int = 10, h_values=(10, 20), out_json="results/fig34.json"):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the repeat lanes over the local devices "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch for CPU emulation)")
+    run(shard=ap.parse_args().shard)

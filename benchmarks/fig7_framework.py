@@ -21,10 +21,10 @@ from repro.core.sweep import SweepRunner, build_scheduler
 
 def run(h_values=(10, 20, 40), target_acc: float = 0.62,
         max_iters: int = 12, out_json="results/fig7.json",
-        assign: str = "geo"):
+        assign: str = "geo", shard: bool = False):
     sp, pop, fed = make_world("fmnist_syn", seed=0)
     runner = SweepRunner(sp, [(pop, fed)], lr=0.01, alloc_steps=100,
-                         model_seed=0)
+                         model_seed=0, shard=shard)
     summary = {}
     for H in h_values:
         sched_name = "ikc" if H < fed.n_devices else "fedavg"
@@ -65,4 +65,14 @@ def run(h_values=(10, 20, 40), target_acc: float = 0.62,
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--assign", default="geo",
+                    help="geo (default) | hfel | mod")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard sweep lanes over the local devices "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch for CPU emulation)")
+    args = ap.parse_args()
+    run(assign=args.assign, shard=args.shard)

@@ -6,11 +6,16 @@ Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
 reduced scale by default (CPU container); EXPERIMENTS.md records the
 scale factors and validates the paper's *relative* claims. ``--smoke``
 restricts to the perf-tracking micro-benchmarks (engine / hfel /
-hier_agg / drl_train) at their tiny CI shapes — the bench-smoke CI job runs exactly
+hier_agg / drl_train / sweep_shard) at their tiny CI shapes — the
+bench-smoke CI job runs exactly
 that and uploads the ``results/*.json`` outputs as artifacts. ``--perf``
-runs the same four at full scale but writes the JSON under
+runs the same five at full scale but writes the JSON under
 ``results/`` (gitignored), so the weekly CI job's artifacts are always
 freshly produced files, never the committed repo-root ``BENCH_*.json``.
+``--check`` then compares the fresh smoke timings against the committed
+``benchmarks/baselines/*.json`` and fails the run on a >2x slowdown of
+any shared ``*_ms`` field (``$BENCH_CHECK_FACTOR`` overrides the
+factor; sub-5ms baseline fields are noise and skipped).
 
 Each sub-benchmark runs in its own try block: one failure prints a
 ``<name>,0.0,FAILED`` line and the remaining suites still run, but the
@@ -21,10 +26,108 @@ GitHub Actions job), appended there as a markdown table.
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import os
 import sys
 import time
 import traceback
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+
+def _perf_fields(obj, prefix=""):
+    """Recursively collect comparable perf entries from a bench JSON.
+
+    Returns {path: (value_ms_or_rate, kind)} with kind "time" for
+    ``*_ms`` / ``*_s`` fields (normalised to ms; lower is better) and
+    "rate" for ``*_per_s`` throughputs (higher is better). Walks nested
+    dicts AND lists so every smoke baseline contributes fields (hfel
+    emits ``*_s`` under cases, drl only ``*_eps_per_s``, hier_agg a list
+    of sweep rows)."""
+    out = {}
+    if isinstance(obj, dict):
+        items = obj.items()
+    elif isinstance(obj, list):
+        items = ((str(i), v) for i, v in enumerate(obj))
+    else:
+        return out
+    for k, v in items:
+        path = f"{prefix}{k}"
+        if isinstance(v, (dict, list)):
+            out.update(_perf_fields(v, prefix=f"{path}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            if k.endswith("_per_s"):
+                out[path] = (float(v), "rate")
+            elif k.endswith("_ms"):
+                out[path] = (float(v), "time")
+            elif k.endswith("_s"):
+                out[path] = (float(v) * 1e3, "time")
+    return out
+
+
+def check_regressions(results_dir: str = "results",
+                      baseline_dir: str = BASELINE_DIR,
+                      factor: float | None = None,
+                      floor_ms: float = 5.0) -> list[str]:
+    """Compare fresh smoke perf numbers against the committed baselines.
+
+    For every baseline under ``benchmarks/baselines/``, the matching
+    fresh file under ``results_dir`` must exist (a missing file means
+    the results pipeline drifted — that IS a failure, not a skip) and
+    each shared field must stay within ``factor``x of the baseline
+    (default 2, override via $BENCH_CHECK_FACTOR): timing fields
+    (``*_ms`` / ``*_s``) must not slow down past factor*x, throughput
+    fields (``*_per_s``) must not drop below baseline/factor. Timing
+    fields below ``floor_ms`` in the baseline are skipped — at smoke
+    shapes those are dispatch-overhead noise, not signal. Comparing
+    zero fields overall is also a failure (a vacuously green guard is a
+    disabled guard). Returns the list of violation strings.
+    """
+    if factor is None:
+        factor = float(os.environ.get("BENCH_CHECK_FACTOR", "2.0"))
+    failures = []
+    compared = 0
+    for base_path in sorted(glob.glob(os.path.join(baseline_dir,
+                                                   "BENCH_*.json"))):
+        name = os.path.basename(base_path)
+        fresh_path = os.path.join(results_dir, name)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh results file missing under "
+                            f"{results_dir}/ (pipeline drift?)")
+            continue
+        with open(base_path) as fh:
+            base = _perf_fields(json.load(fh))
+        with open(fresh_path) as fh:
+            fresh = _perf_fields(json.load(fh))
+        for field, (base_v, kind) in sorted(base.items()):
+            if field not in fresh or fresh[field][1] != kind:
+                continue
+            if kind == "time" and base_v < floor_ms:
+                continue
+            if kind == "rate" and base_v <= 0:
+                continue
+            compared += 1
+            fresh_v = fresh[field][0]
+            if kind == "time" and fresh_v > base_v * factor:
+                failures.append(
+                    f"{name}:{field} {fresh_v:.1f}ms vs baseline "
+                    f"{base_v:.1f}ms ({fresh_v / base_v:.2f}x > "
+                    f"{factor:.1f}x)")
+            elif kind == "rate" and fresh_v < base_v / factor:
+                failures.append(
+                    f"{name}:{field} {fresh_v:.2f}/s vs baseline "
+                    f"{base_v:.2f}/s ({base_v / fresh_v:.2f}x drop > "
+                    f"{factor:.1f}x)")
+    if compared == 0:
+        failures.append("no comparable fields between baselines and "
+                        "fresh results — guard is vacuous")
+    status = f"failures={len(failures)}" if failures else "ok"
+    print(f"bench-check,{compared:.1f},{status}", flush=True)
+    for f in failures:
+        print(f"bench-check-REGRESSION,0.0,{f}", flush=True)
+    return failures
 
 
 def write_step_summary(rows, total_s: float, path: str | None = None) -> None:
@@ -47,7 +150,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
-                         "engine|hfel|hier_agg|drl_train")
+                         "engine|hfel|hier_agg|drl_train|sweep_shard")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     ap.add_argument("--smoke", action="store_true",
@@ -58,6 +161,11 @@ def main() -> None:
                          "JSON written under results/ (fresh files for "
                          "CI artifacts — never the committed repo-root "
                          "BENCH_*.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="after the suites, compare results/*_smoke.json "
+                         "timings against the committed "
+                         "benchmarks/baselines/ and exit non-zero on a "
+                         ">2x slowdown ($BENCH_CHECK_FACTOR overrides)")
     args = ap.parse_args()
 
     state = {"trained": None}
@@ -118,6 +226,10 @@ def main() -> None:
         from benchmarks import bench_drl_train
         _perf_bench(bench_drl_train, "drl_train")
 
+    def run_sweep_shard():
+        from benchmarks import bench_sweep_shard
+        _perf_bench(bench_sweep_shard, "sweep_shard")
+
     # fig6 reuses fig5's trained D3QN when both are selected, so order
     # matters: fig5 before fig6
     suites = [
@@ -132,9 +244,11 @@ def main() -> None:
         ("hfel", run_hfel),
         ("hier_agg", run_hier_agg),
         ("drl_train", run_drl_train),
+        ("sweep_shard", run_sweep_shard),
     ]
     if args.smoke or args.perf:
-        perf_names = ("engine", "hfel", "hier_agg", "drl_train")
+        perf_names = ("engine", "hfel", "hier_agg", "drl_train",
+                      "sweep_shard")
         suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]
@@ -157,6 +271,15 @@ def main() -> None:
             print(f"{name},0.0,FAILED", flush=True)
             failed.append(name)
             timings.append((name, time.time() - t0, "FAILED"))
+    # the regression check runs BEFORE the status line / step summary so
+    # a check-only failure is visible in both, not just the exit code
+    if args.check:
+        t0 = time.time()
+        regressions = check_regressions()
+        if regressions:
+            failed.append("bench-check")
+        timings.append(("bench-check", time.time() - t0,
+                        "FAILED" if regressions else "ok"))
     total = time.time() - t_all
     status = f"failed={'|'.join(failed)}" if failed else "ok"
     print(f"benchmark_suite_total,{total * 1e6:.0f},{status}", flush=True)

@@ -23,6 +23,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.core import cost_model as cm
 from repro.core.assignment.geo import GeoAssigner
@@ -97,34 +99,23 @@ def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
     return sched, stats
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
-    "agg_kernel"))
-def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
-                g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
-                assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
-                train_only: bool = False, agg_kernel: bool = False,
-                done_b=None):
-    """One fused round for S lanes at once.
+def _sweep_round_lanes(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
+                       p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b,
+                       sizes_b, sched_b, assign_b, lr, done_b, *, M: int,
+                       L: int, Q: int, alloc_steps: int, train_only: bool,
+                       agg_kernel: bool, lane_chunk: Optional[int] = None):
+    """Traceable lane-vmapped round body shared by the single-device
+    ``sweep_round`` jit and the ``shard_map`` blocks of
+    ``sweep_round_sharded`` (each device runs this on its lane block).
 
-    Population/data arrays carry a leading lane axis (S, ...); sched_b
-    and assign_b are (S, H); sizes_b (S, N) holds the Algorithm-1
-    aggregation weights. Gathers each lane's cohort and vmaps
-    ``round_step_core``, returning (params_b, (T_i, E_i)) with (S,)
-    cost vectors. train_only=True skips resource allocation and cost
-    bookkeeping entirely (accuracy-only sweeps like Fig. 3/4) and
-    returns zero costs. agg_kernel=True routes every lane's Algorithm-1
-    aggregation through the lane-batched ``hier_agg`` Pallas kernel —
-    the vmap hits the kernel's ``custom_vmap`` rule, so all S lanes
-    share ONE (S, P/BP)-grid launch per aggregation instead of falling
-    back to S per-lane interpret calls. done_b: optional (S,) bool mask
-    of lanes that already reached the sweep's accuracy target — a done
-    lane's model is frozen (params pass through unchanged) and it stops
-    accruing training compute (its T_i/E_i come back zero), so finished
-    lanes no longer distort the sweep's cost totals.
-    """
-    if done_b is None:
-        done_b = jnp.zeros((sched_b.shape[0],), bool)
+    lane_chunk: None vmaps the whole lane axis into one batched program
+    (the PR-1 layout, right for MXU-rich hardware). An int processes the
+    lanes sequentially in vmapped chunks of that size via ``lax.map`` —
+    on CPU hosts the small per-chunk working set stays cache-resident
+    and XLA stops batch-fusing the tiny per-lane ops into bandwidth-
+    bound monsters, which measures 1.8-2.4x by itself at S=128 across
+    runs (see ``BENCH_sweep_shard.json``); must divide the lane-axis
+    length."""
 
     def one(params, u, D, p, g, g_cloud, B_m, X, y, mask, sizes, sched,
             assign, done):
@@ -146,9 +137,102 @@ def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
         return new_params, (jnp.where(done, 0.0, T_i),
                             jnp.where(done, 0.0, E_i))
 
-    return jax.vmap(one)(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
-                         X_b, y_b, mask_b, sizes_b, sched_b, assign_b,
-                         done_b)
+    lane_in = (params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
+               mask_b, sizes_b, sched_b, assign_b, done_b)
+    if lane_chunk is None:
+        return jax.vmap(one)(*lane_in)
+    n = sched_b.shape[0]
+    if n % lane_chunk != 0:
+        raise ValueError(f"lane_chunk={lane_chunk} must divide the lane "
+                         f"axis ({n})")
+    stacked = jax.tree.map(
+        lambda x: x.reshape((n // lane_chunk, lane_chunk) + x.shape[1:]),
+        lane_in)
+    out = jax.lax.map(lambda xs: jax.vmap(one)(*xs), stacked)
+    return jax.tree.map(
+        lambda x: x.reshape((n,) + x.shape[2:]), out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
+    "agg_kernel", "lane_chunk"))
+def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
+                g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
+                assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
+                train_only: bool = False, agg_kernel: bool = False,
+                lane_chunk: Optional[int] = None, done_b=None):
+    """One fused round for S lanes at once.
+
+    Population/data arrays carry a leading lane axis (S, ...); sched_b
+    and assign_b are (S, H); sizes_b (S, N) holds the Algorithm-1
+    aggregation weights. Gathers each lane's cohort and vmaps
+    ``round_step_core``, returning (params_b, (T_i, E_i)) with (S,)
+    cost vectors. train_only=True skips resource allocation and cost
+    bookkeeping entirely (accuracy-only sweeps like Fig. 3/4) and
+    returns zero costs. agg_kernel=True routes every lane's Algorithm-1
+    aggregation through the lane-batched ``hier_agg`` Pallas kernel —
+    the vmap hits the kernel's ``custom_vmap`` rule, so all S lanes
+    share ONE (S, P/BP)-grid launch per aggregation instead of falling
+    back to S per-lane interpret calls. done_b: optional (S,) bool mask
+    of lanes that already reached the sweep's accuracy target — a done
+    lane's model is frozen (params pass through unchanged) and it stops
+    accruing training compute (its T_i/E_i come back zero), so finished
+    lanes no longer distort the sweep's cost totals. lane_chunk: see
+    ``_sweep_round_lanes`` — cache-blocked sequential chunks for CPU
+    hosts, None (one vmapped program) for accelerators.
+    """
+    if done_b is None:
+        done_b = jnp.zeros((sched_b.shape[0],), bool)
+    return _sweep_round_lanes(
+        apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
+        y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b, M=M, L=L, Q=Q,
+        alloc_steps=alloc_steps, train_only=train_only,
+        agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
+    "agg_kernel", "mesh", "lane_chunk"))
+def sweep_round_sharded(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
+                        p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b,
+                        sizes_b, sched_b, assign_b, lr, *, M: int, L: int,
+                        Q: int, alloc_steps: int, mesh,
+                        train_only: bool = False, agg_kernel: bool = False,
+                        lane_chunk: Optional[int] = None, done_b=None):
+    """``sweep_round`` laid out over a 1-D ``Mesh(("lane",))``.
+
+    Same args/semantics as ``sweep_round`` plus a static ``mesh``
+    (``launch.mesh.sweep_mesh()``): the stacked lane axis S — which must
+    be a multiple of the mesh's device count; ``SweepRunner`` pads with
+    dead done-masked lanes — is block-partitioned over the devices and
+    every device runs the identical vmapped round body on its S/d lane
+    block as ONE SPMD program. Lanes are independent (no collectives):
+    ``out_specs`` just re-stacks the per-device blocks. Scheduling /
+    assignment stay host-side in ``SweepRunner.run`` — nothing inside
+    the sharded region calls back to the host, which is what keeps the
+    hfel/drl assignment hooks shard-compatible (their jitted searches
+    run on the default device *between* sharded rounds). lane_chunk
+    applies *within* each device's lane block (must divide S/d; see
+    ``_sweep_round_lanes`` for when to use it).
+    """
+    if done_b is None:
+        done_b = jnp.zeros((sched_b.shape[0],), bool)
+    lane, rep = PartitionSpec("lane"), PartitionSpec()
+
+    def block(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
+              mask_b, sizes_b, sched_b, assign_b, lr, done_b):
+        return _sweep_round_lanes(
+            apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
+            X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b,
+            M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
+            agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+
+    sharded = shard_map(block, mesh=mesh,
+                        in_specs=(lane,) * 13 + (rep, lane),
+                        out_specs=(lane, (lane, lane)),
+                        check_rep=False)
+    return sharded(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
+                   y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))
@@ -213,20 +297,58 @@ class SweepRunner:
     identical shapes required (same N devices, M edges, test-set size).
     Each lane gets its own model init, scheduler state and host RNG; the
     per-round compute of ALL lanes is a single jitted dispatch.
+
+    shard=True lays the lane axis out over a 1-D ``Mesh(("lane",))``
+    (``mesh``, default ``launch.mesh.sweep_mesh()`` over all local
+    devices) and runs every round through ``sweep_round_sharded``: one
+    SPMD program, each device owning an S/d lane block. S is padded up
+    to a multiple of the device count with *dead lanes* — clones of lane
+    0 that are born with the per-lane done-mask set, so they freeze
+    their params, report zero costs and never consume host rng or
+    assignment search; all outputs are unpadded back to the real S. The
+    shard=False vmapped path is the parity oracle
+    (``tests/test_sweep_shard.py``).
+
+    lane_chunk=k executes lanes in sequential vmapped chunks of k (per
+    device block when sharded) instead of one whole-axis vmap — a CPU
+    cache-blocking knob, see ``_sweep_round_lanes``; leave None on
+    accelerators.
     """
 
     def __init__(self, sp: cm.SystemParams,
                  worlds: Sequence[Tuple[cm.Population, FederatedData]],
                  *, lr: float = 0.01, alloc_steps: int = 100,
-                 model_seed: int = 0, agg_kernel: bool = False):
+                 model_seed: int = 0, agg_kernel: bool = False,
+                 shard: bool = False, mesh=None,
+                 lane_chunk: Optional[int] = None):
         assert len(worlds) >= 1
         self.sp, self.lr, self.alloc_steps = sp, lr, alloc_steps
         self.agg_kernel = agg_kernel
+        self.lane_chunk = lane_chunk
         self.pops = [w[0] for w in worlds]
         self.feds = [w[1] for w in worlds]
         self.S = len(worlds)
         self.M = self.pops[0].n_edges
         self.N = self.feds[0].n_devices
+
+        if shard:
+            from repro.launch.mesh import sweep_mesh
+            from repro.parallel.sharding import pad_lanes
+            self.mesh = mesh if mesh is not None else sweep_mesh()
+            if tuple(self.mesh.axis_names) != ("lane",):
+                raise ValueError("shard=True needs a 1-D ('lane',) mesh "
+                                 f"(got axes {self.mesh.axis_names})")
+            self.S_pad = pad_lanes(self.S, self.mesh.devices.size)
+            block = self.S_pad // self.mesh.devices.size
+        else:
+            self.mesh = None
+            self.S_pad = self.S
+            block = self.S
+        if lane_chunk is not None and block % lane_chunk != 0:
+            raise ValueError(
+                f"lane_chunk={lane_chunk} must divide the per-device "
+                f"lane block ({block})")
+        self._n_dead = self.S_pad - self.S
 
         Dmax = max(int(max(len(y) for y in fed.y)) for fed in self.feds)
         padded = [pad_device_data(fed, Dmax) for fed in self.feds]
@@ -252,6 +374,28 @@ class SweepRunner:
         self.params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
         self.apply_fn = cnn.cnn_apply
         self.model_bits = tree_bytes(inits[0]) * 8
+
+        if self.mesh is not None:
+            self._shard_lane_stacks()
+
+    def _shard_lane_stacks(self):
+        """Pad every lane-stacked array up to S_pad with clones of lane 0
+        (dead lanes: done-masked from round 0, outputs discarded) and lay
+        the lane axis out over the mesh so round inputs are born resident
+        on their owning devices instead of resharding every dispatch."""
+        from repro.parallel.sharding import lane_sharding
+        sh = lane_sharding(self.mesh)
+
+        def prep(a):
+            if self._n_dead:
+                a = jnp.concatenate(
+                    [a, jnp.repeat(a[:1], self._n_dead, axis=0)])
+            return jax.device_put(a, sh)
+
+        for name in ("X_b", "y_b", "mask_b", "Xt_b", "yt_b", "fed_sizes_b",
+                     "u_b", "D_b", "p_b", "g_b", "g_cloud_b", "B_m_b"):
+            setattr(self, name, prep(getattr(self, name)))
+        self.params0 = jax.tree.map(prep, self.params0)
 
     # ---------------------------------------------------------------- run
 
@@ -311,7 +455,11 @@ class SweepRunner:
         Ts: List[np.ndarray] = []
         Es: List[np.ndarray] = []
         H = None
-        done = np.zeros(self.S, bool)
+        # dead pad lanes (sharding only) are done from round 0: frozen
+        # params, zero costs, no host rng / search spend, outputs sliced
+        # away below.
+        done = np.zeros(self.S_pad, bool)
+        done[self.S:] = True
         scheds = [None] * self.S
         assigns = [None] * self.S
         for _ in range(n_rounds):
@@ -333,21 +481,37 @@ class SweepRunner:
                        else np.asarray(assign_fn(self.pops[s], scheds[s],
                                                  rngs[s]))
                        for s in range(self.S)]
-            sched_b = jnp.asarray(np.stack(scheds))
-            assign_b = jnp.asarray(np.stack(assigns))
-            params_b, (T_i, E_i) = sweep_round(
-                self.apply_fn, sp, params_b, self.u_b, self.D_b, self.p_b,
-                self.g_b, self.g_cloud_b, self.B_m_b, self.X_b, self.y_b,
-                self.mask_b, sizes_b, sched_b, assign_b, self.lr,
-                M=self.M, L=sp.L, Q=sp.Q, alloc_steps=self.alloc_steps,
-                train_only=train_only, agg_kernel=self.agg_kernel,
-                done_b=jnp.asarray(done))
-            acc = self._eval(params_b)
+            # dead pad lanes alias lane 0's cohort (no rng consumed; their
+            # round output is masked by done and discarded).
+            pad = [scheds[0]] * self._n_dead
+            sched_b = jnp.asarray(np.stack(scheds + pad))
+            assign_b = jnp.asarray(np.stack(
+                assigns + [assigns[0]] * self._n_dead))
+            if self.mesh is not None:
+                params_b, (T_i, E_i) = sweep_round_sharded(
+                    self.apply_fn, sp, params_b, self.u_b, self.D_b,
+                    self.p_b, self.g_b, self.g_cloud_b, self.B_m_b,
+                    self.X_b, self.y_b, self.mask_b, sizes_b, sched_b,
+                    assign_b, self.lr, M=self.M, L=sp.L, Q=sp.Q,
+                    alloc_steps=self.alloc_steps, mesh=self.mesh,
+                    train_only=train_only, agg_kernel=self.agg_kernel,
+                    lane_chunk=self.lane_chunk, done_b=jnp.asarray(done))
+            else:
+                params_b, (T_i, E_i) = sweep_round(
+                    self.apply_fn, sp, params_b, self.u_b, self.D_b,
+                    self.p_b, self.g_b, self.g_cloud_b, self.B_m_b,
+                    self.X_b, self.y_b, self.mask_b, sizes_b, sched_b,
+                    assign_b, self.lr, M=self.M, L=sp.L, Q=sp.Q,
+                    alloc_steps=self.alloc_steps, train_only=train_only,
+                    agg_kernel=self.agg_kernel, lane_chunk=self.lane_chunk,
+                    done_b=jnp.asarray(done))
+            acc_full = self._eval(params_b)              # (S_pad,)
+            acc = acc_full[:self.S]
             accs.append(acc)
-            Ts.append(np.asarray(T_i))
-            Es.append(np.asarray(E_i))
+            Ts.append(np.asarray(T_i)[:self.S])
+            Es.append(np.asarray(E_i)[:self.S])
             if target_acc is not None:
-                done = done | (acc >= target_acc)
+                done = done | (acc_full >= target_acc)
                 if done.all():
                     break
 

@@ -27,6 +27,27 @@ def make_debug_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def sweep_mesh(n_devices: int | None = None):
+    """1-D ``Mesh(("lane",))`` over the local devices for lane-parallel
+    sweeps (``SweepRunner(shard=True)``): seed lanes are embarrassingly
+    parallel, so the sweep layer only ever shards the stacked lane axis.
+
+    n_devices: use the first n local devices (default: all of them). On
+    CPU the device count comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set BEFORE
+    jax import — which is why this is a function, not a module constant
+    (same rule as the production meshes above).
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"sweep_mesh: asked for {n_devices} devices, only "
+                f"{len(devs)} visible")
+        devs = devs[:n_devices]
+    return jax.make_mesh((len(devs),), ("lane",), devices=devs)
+
+
 # TPU v5e hardware constants for the roofline model (per chip).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -61,6 +61,28 @@ def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+# ------------------------------------------------------- sweep lane axis
+
+def lane_spec() -> P:
+    """Partition spec for lane-stacked sweep arrays: shard the leading
+    (seed-lane) axis, replicate the rest (specs shorter than the rank
+    leave trailing dims unsharded)."""
+    return P("lane")
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing the leading lane axis of a (S, ...) array —
+    or every leaf of a lane-stacked pytree via ``jax.device_put`` — over
+    a 1-D ``sweep_mesh``. S must be a multiple of the lane axis size
+    (``SweepRunner`` pads with dead lanes, see ``pad_lanes``)."""
+    return NamedSharding(mesh, lane_spec())
+
+
+def pad_lanes(n_lanes: int, n_devices: int) -> int:
+    """Smallest multiple of n_devices >= n_lanes (lane-block padding)."""
+    return -(-n_lanes // n_devices) * n_devices
+
+
 # ------------------------------------------------------------ parameters
 
 def _param_rule(path: str, ndim: int, cfg: ModelConfig) -> P:

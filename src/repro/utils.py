@@ -115,3 +115,28 @@ def stable_hash(s: str) -> int:
     for c in s.encode():
         h = (h ^ c) * 16777619 & 0xFFFFFFFF
     return h
+
+
+def forced_device_env(n_devices: int, pythonpath=()) -> dict:
+    """Child-process env for N emulated host devices.
+
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    jax import, so multi-device CPU work runs in spawned children — this
+    builds their env in ONE place (the ``multidevice`` test fixture and
+    ``benchmarks/bench_sweep_shard`` both use it): any pre-existing
+    device-count flag in the inherited XLA_FLAGS is stripped (last-flag
+    -wins would otherwise depend on the caller's environment), the CPU
+    platform is pinned, and ``pythonpath`` entries are prepended.
+    """
+    import os
+
+    env = os.environ.copy()
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n_devices}"])
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [*pythonpath] + ([env["PYTHONPATH"]]
+                         if env.get("PYTHONPATH") else []))
+    return env

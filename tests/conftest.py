@@ -1,6 +1,9 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
-single real CPU device (only launch/dryrun.py forces 512 placeholders)."""
+single real CPU device (only launch/dryrun.py forces 512 placeholders,
+and the ``multidevice`` fixture spawns subprocesses that force 8)."""
 import os
+import subprocess
+import sys
 
 # determinism + quieter logs
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -8,6 +11,43 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import numpy as np
 import pytest
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_REPO_ROOT = os.path.dirname(_TESTS_DIR)
+
+
+@pytest.fixture
+def multidevice():
+    """Run a zero-arg payload function in a subprocess with N emulated
+    host devices. ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    only takes effect before jax import, and this conftest (plus half
+    the suite) has already imported jax — so multidevice tests put the
+    device-dependent asserts in a module-level ``_payload_*`` function
+    and hand ``"module:function"`` to this fixture, which spawns a fresh
+    interpreter with the flag set and fails the test with the child's
+    output on a non-zero exit.
+    """
+
+    def run(target: str, n_devices: int = 8, timeout: int = 1200):
+        from repro.utils import forced_device_env
+
+        mod, fn = target.split(":")
+        env = forced_device_env(
+            n_devices,
+            pythonpath=(os.path.join(_REPO_ROOT, "src"), _TESTS_DIR))
+        proc = subprocess.run(
+            [sys.executable, "-c",
+             f"import {mod} as _m; _m.{fn}()"],
+            env=env, cwd=_REPO_ROOT, capture_output=True, text=True,
+            timeout=timeout)
+        if proc.returncode != 0:
+            pytest.fail(
+                f"multidevice payload {target} failed (exit "
+                f"{proc.returncode}):\n{proc.stdout}\n{proc.stderr}",
+                pytrace=False)
+        return proc.stdout
+
+    return run
 
 
 @pytest.fixture(scope="session")

@@ -1,6 +1,7 @@
 """Resource allocation (problem 27): optimality vs grid search, feasibility."""
 import jax.numpy as jnp
 import numpy as np
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cost_model as cm
 from repro.core import resource as ra
@@ -143,3 +144,40 @@ def test_masked_allocation_is_finite():
     assert not np.isnan(np.asarray(res.f)).any()
     uni = ra.allocate_uniform(SP, u, D, p, g, B, mask)
     assert float(res.obj) <= float(uni.obj) * 1.02
+
+
+# -------------------------------------- trial-layout property tests
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(min_value=1, max_value=5),
+       E=st.integers(min_value=1, max_value=3),
+       H=st.integers(min_value=1, max_value=8),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_flatten_trials_roundtrip_property(K, E, H, seed):
+    """For ANY trial-major shape: flat row k*E+e is exactly trial k's
+    edge e, and ``unflatten_trials`` is the bitwise inverse of
+    ``flatten_trials`` on every AllocResult field (the HFEL search and
+    the DRL wave engine both lean on this layout invariant)."""
+    rng = np.random.default_rng(seed)
+    u, D, p, g, extra = (jnp.asarray(rng.random((K, E, H)))
+                         for _ in range(5))
+    B = jnp.asarray(rng.random((K, E)))
+    mask = jnp.asarray(rng.random((K, E, H)) < 0.5)
+    fu, fD, fp, fg, fB, fmask, fextra = ra.flatten_trials(
+        u, D, p, g, B, mask, extra)
+    assert fu.shape == (K * E, H) and fB.shape == (K * E,)
+    assert fextra.shape == (K * E, H)
+    for k in range(K):
+        for e in range(E):
+            row = k * E + e
+            np.testing.assert_array_equal(np.asarray(fu[row]),
+                                          np.asarray(u[k, e]))
+            np.testing.assert_array_equal(np.asarray(fmask[row]),
+                                          np.asarray(mask[k, e]))
+            assert float(fB[row]) == float(B[k, e])
+    res = ra.AllocResult(b=fu, f=fD, T_edge=fB, E_edge=fB, obj=fB)
+    tri = ra.unflatten_trials(res, K, E)
+    np.testing.assert_array_equal(np.asarray(tri.b), np.asarray(u))
+    np.testing.assert_array_equal(np.asarray(tri.f), np.asarray(D))
+    np.testing.assert_array_equal(np.asarray(tri.T_edge), np.asarray(B))
+    np.testing.assert_array_equal(np.asarray(tri.obj), np.asarray(B))
