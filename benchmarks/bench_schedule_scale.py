@@ -1,0 +1,279 @@
+"""Micro-benchmark: scheduling + clustering-cost scaling on the
+population axis (ISSUE 6 tentpole; ROADMAP "millions of IoT users").
+
+Sweeps N ∈ {1e3, 1e4, 1e5} devices at a FIXED cohort (K=10 clusters,
+h=10 → H=100) and times, per N:
+
+* per-round ``schedule()`` for the vectorized FedAvg/VKC/IKC state
+  machines (median over rounds) — the O(scheduled) claim is
+  ``sublinear_10x``: N=1e5 within 10x of N=1e3 for a fixed cohort;
+* the serial list-based oracles (capped at ``serial_max_n`` — they are
+  O(N) per round, which is the point);
+* the jitted segment-program ``clustering_cost`` and the gather +
+  segment-sum cohort ``round_cost`` evaluation (both O(H) post-compile);
+* ``adjusted_rand_index`` at full N (int64-overflow regression scale);
+* K-means distance passes, Pallas kernel (interpret on CPU) vs the jnp
+  oracle, plus one full K-means fit on the Table-I device features.
+
+It then reruns the paper's headline scheduling-ratio experiment
+(Figs. 3-4 read 50%/30% scheduling suffices) at N=1e5 on the COST side:
+devices are K-means-clustered on their cost-model features, IKC
+schedules ratio*N of them, and the round delay / energy / uplink
+message volume are evaluated against the ratio=1.0 cohort. (CNN
+convergence at N=1e5 is not reachable on this container; the
+delay/energy/message savings are the half of the claim that scales.)
+
+    PYTHONPATH=src python -m benchmarks.bench_schedule_scale [--smoke]
+
+``--smoke`` keeps the full N sweep — the CI guard's job is exactly
+"N=1e5 rounds complete without O(N) host loops" — but trims repeat
+counts and the interpret-mode kernel shape; JSON under ``results/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+N_SWEEP = (1_000, 10_000, 100_000)
+K_CLUSTERS = 10
+H_COHORT = 100                   # h=10 per cluster, fixed across N
+ROUNDS = 30
+SERIAL_ROUNDS = 5
+SERIAL_MAX_N = 10_000            # serial oracles are O(N)/round; cap them
+RATIOS = (0.3, 0.5, 1.0)
+SUBLINEAR_GATE = 10.0            # N=1e5 within 10x of N=1e3
+
+
+def _median_round_s(sched, rng, rounds: int) -> float:
+    import numpy as np
+    for _ in range(2):                                   # warm the state
+        sched.schedule(rng)
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        sched.schedule(rng)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _labels(rng, n: int, k: int):
+    lab = rng.integers(0, k, n)
+    lab[:k] = range(k)                                   # no empty clusters
+    return lab
+
+
+def _cohort_cost(sp, pop, sched_idx):
+    """Nearest-edge assignment + uniform bandwidth share + (13)/(14) on
+    the scheduled subset only — gather + segment ops, O(H)."""
+    import jax.numpy as jnp
+
+    from repro.core import cost_model as cm
+
+    g_sel_all = pop.g[sched_idx]                         # (H, M)
+    assign = jnp.argmax(g_sel_all, axis=1)
+    counts = jnp.bincount(assign, length=pop.n_edges)
+    b = pop.B_m[assign] / jnp.maximum(counts[assign], 1)
+    f = pop.f_max[sched_idx]
+    T_i, E_i, _, _ = cm.round_cost(sp, pop, sched_idx, assign, b, f)
+    return float(T_i), float(E_i)
+
+
+def _measure(n_sweep, rounds, serial_rounds, serial_max_n, kernel_np,
+             ratio_rounds):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.clustering import (adjusted_rand_index, kmeans,
+                                       pairwise_sq_dists)
+    from repro.core.cost_model import SystemParams, sample_population
+    from repro.core.scheduling.device_clustering import clustering_cost
+    from repro.core.scheduling.schedulers import (
+        FedAvgScheduler, IKCScheduler, SerialFedAvgScheduler,
+        SerialIKCScheduler, SerialVKCScheduler, VKCScheduler)
+
+    out = {"config": {"K": K_CLUSTERS, "H": H_COHORT, "rounds": rounds,
+                      "serial_max_n": serial_max_n,
+                      "host_cores": os.cpu_count()},
+           "scale": {}}
+    h = H_COHORT // K_CLUSTERS
+    for n in n_sweep:
+        rng = np.random.default_rng(0)
+        sp = SystemParams(n_devices=n, n_edges=5)
+        pop = sample_population(sp, seed=0)
+        lab = _labels(rng, n, K_CLUSTERS)
+        row = {}
+        engines = {"fedavg": FedAvgScheduler(n, H_COHORT),
+                   "vkc": VKCScheduler(lab, h),
+                   "ikc": IKCScheduler(lab, h)}
+        for name, s in engines.items():
+            row[f"{name}_round_ms"] = _median_round_s(s, rng, rounds) * 1e3
+        if n <= serial_max_n:
+            serials = {"fedavg": SerialFedAvgScheduler(n, H_COHORT),
+                       "vkc": SerialVKCScheduler(lab, h),
+                       "ikc": SerialIKCScheduler(lab, h)}
+            for name, s in serials.items():
+                row[f"{name}_serial_round_ms"] = (
+                    _median_round_s(s, rng, serial_rounds) * 1e3)
+        # jitted Alg.-2 pricing: time the steady-state call
+        clustering_cost(sp, pop, aux_bits=1e5)           # compile
+        t0 = time.perf_counter()
+        delay, energy = clustering_cost(sp, pop, aux_bits=1e5)
+        row["clustering_cost_ms"] = (time.perf_counter() - t0) * 1e3
+        row["clustering_delay_model"] = delay
+        # cohort round-cost evaluation on the scheduled subset (O(H))
+        sched_idx = jnp.asarray(engines["ikc"].schedule(rng))
+        _cohort_cost(sp, pop, sched_idx)                 # compile
+        t0 = time.perf_counter()
+        _cohort_cost(sp, pop, sched_idx)
+        row["round_cost_ms"] = (time.perf_counter() - t0) * 1e3
+        # ARI at full N (the int64-overflow satellite's scale)
+        noisy = np.where(rng.random(n) < 0.2,
+                         rng.integers(0, K_CLUSTERS, n), lab)
+        t0 = time.perf_counter()
+        ari = adjusted_rand_index(noisy, lab)
+        row["ari_ms"] = (time.perf_counter() - t0) * 1e3
+        row["ari_value"] = float(ari)
+        assert -0.5 <= ari <= 1.0, ari                   # overflow guard
+        out["scale"][str(n)] = row
+
+    # sublinearity claim: fixed cohort => N=1e5 within 10x of N=1e3
+    lo, hi = str(min(n_sweep)), str(max(n_sweep))
+    ratios = {name: (out["scale"][hi][f"{name}_round_ms"] /
+                     max(out["scale"][lo][f"{name}_round_ms"], 1e-6))
+              for name in ("fedavg", "vkc", "ikc")}
+    out["schedule_scale_ratio"] = ratios
+    out["claim_sublinear_10x"] = bool(
+        max(ratios.values()) <= SUBLINEAR_GATE)
+
+    # K-means distance pass: Pallas kernel (interpret on CPU) vs jnp
+    kn, kp = kernel_np
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (kn, kp), jnp.float32)
+    c = jax.random.normal(key, (K_CLUSTERS, kp), jnp.float32)
+    for use_kernel in (False, True):
+        tag = "kernel" if use_kernel else "jnp"
+        jax.block_until_ready(pairwise_sq_dists(x, c, use_kernel=use_kernel))
+        t0 = time.perf_counter()
+        jax.block_until_ready(pairwise_sq_dists(x, c, use_kernel=use_kernel))
+        out[f"pairwise_{tag}_ms"] = (time.perf_counter() - t0) * 1e3
+    out["pairwise_shape"] = [kn, kp]
+
+    # one full K-means fit on Table-I device features at the largest N
+    n_big = max(n_sweep)
+    sp = SystemParams(n_devices=n_big, n_edges=5)
+    pop = sample_population(sp, seed=0)
+    feats = pop.features()
+    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-8)
+    lab_big, _ = kmeans(jax.random.PRNGKey(1), feats, K_CLUSTERS, iters=10)
+    jax.block_until_ready(lab_big)
+    t0 = time.perf_counter()
+    lab_big, _ = kmeans(jax.random.PRNGKey(1), feats, K_CLUSTERS, iters=10)
+    jax.block_until_ready(lab_big)
+    out["kmeans_fit_ms"] = (time.perf_counter() - t0) * 1e3
+    lab_big = np.asarray(lab_big)
+
+    # scheduling-ratio rerun at N=1e5 (cost side of Figs. 3-4): IKC over
+    # the K-means clusters, delay/energy/message volume vs full
+    # scheduling. lab_big can leave clusters empty (K' < K) — exactly
+    # the short-cohort path the sweep engine tops up.
+    rr = {}
+    base = None
+    rng = np.random.default_rng(1)
+    for ratio in RATIOS:
+        H = int(ratio * n_big)
+        s = IKCScheduler(lab_big, max(1, H // K_CLUSTERS))
+        times = []
+        # median of >= 3 rounds even in smoke: a single 50k-cohort draw is
+        # too noisy for the --check 2x regression gate
+        for _ in range(max(3, ratio_rounds)):
+            t0 = time.perf_counter()
+            sched_idx = s.schedule(rng)
+            times.append(time.perf_counter() - t0)
+        T_i, E_i = _cohort_cost(sp, pop, jnp.asarray(sched_idx))
+        row = {"H": len(sched_idx),
+               "schedule_round_ms": float(np.median(times)) * 1e3,
+               "T_round": T_i, "E_round_j": E_i,
+               "message_gbits": len(sched_idx) * sp.model_bits / 1e9}
+        if ratio == 1.0:
+            base = row
+        rr[f"{ratio:.0%}"] = row
+    for row in rr.values():
+        row["energy_saving_vs_full"] = 1.0 - row["E_round_j"] / base["E_round_j"]
+        row["message_saving_vs_full"] = (
+            1.0 - row["message_gbits"] / base["message_gbits"])
+    out["ratio_rerun_n100k"] = rr
+    return out
+
+
+def _emit(result):
+    from benchmarks.common import emit
+
+    for n, row in result["scale"].items():
+        serial = row.get("ikc_serial_round_ms")
+        emit(f"schedule_scale/N{n}", row["ikc_round_ms"] * 1e3,
+             f"fedavg_ms={row['fedavg_round_ms']:.3f};"
+             f"vkc_ms={row['vkc_round_ms']:.3f};"
+             f"ikc_serial_ms={serial if serial is None else round(serial, 3)};"
+             f"clustering_cost_ms={row['clustering_cost_ms']:.2f};"
+             f"round_cost_ms={row['round_cost_ms']:.2f};"
+             f"ari_ms={row['ari_ms']:.1f}")
+    r = result["schedule_scale_ratio"]
+    emit("schedule_scale/claim_sublinear_10x", 0.0,
+         f"pass={result['claim_sublinear_10x']};"
+         + ";".join(f"{k}={v:.2f}x" for k, v in r.items()))
+    for ratio, row in result["ratio_rerun_n100k"].items():
+        emit(f"schedule_scale/ratio_{ratio}", row["schedule_round_ms"] * 1e3,
+             f"T_round={row['T_round']:.2f}s;E_round={row['E_round_j']:.0f}J;"
+             f"msg={row['message_gbits']:.1f}Gb;"
+             f"E_saving={row['energy_saving_vs_full']:.0%};"
+             f"msg_saving={row['message_saving_vs_full']:.0%}")
+
+
+def run(out_json: str = "BENCH_schedule_scale.json"):
+    result = _measure(N_SWEEP, ROUNDS, SERIAL_ROUNDS, SERIAL_MAX_N,
+                      kernel_np=(1024, 512), ratio_rounds=3)
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+    _emit(result)
+    assert result["claim_sublinear_10x"], result["schedule_scale_ratio"]
+    return result
+
+
+def run_smoke(out_json: str = "results/BENCH_schedule_scale_smoke.json"):
+    """CI guard: the FULL N sweep (the whole point is that N=1e5 rounds
+    complete without O(N) host loops) at trimmed repeat counts."""
+    from benchmarks.common import emit
+
+    result = _measure(N_SWEEP, rounds=5, serial_rounds=2,
+                      serial_max_n=1_000, kernel_np=(256, 512),
+                      ratio_rounds=1)
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+    with open(out_json) as fh:
+        loaded = json.load(fh)
+    assert loaded["claim_sublinear_10x"], loaded["schedule_scale_ratio"]
+    assert str(max(N_SWEEP)) in loaded["scale"]
+    _emit(result)
+    emit("schedule_scale/smoke", 0.0, "pass=True")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="full N sweep at trimmed repeats; JSON under "
+                         "results/")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,8 @@ def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray,
     return jnp.maximum(xx + cc - 2.0 * (x @ c.T), 0.0)
 
 
-def _kmeans_pp_init(key, x: jnp.ndarray, k: int) -> jnp.ndarray:
+def _kmeans_pp_init(key, x: jnp.ndarray, k: int,
+                    use_kernel: bool = False) -> jnp.ndarray:
     n = x.shape[0]
     k0, key = jax.random.split(key)
     first = jax.random.randint(k0, (), 0, n)
@@ -34,7 +35,7 @@ def _kmeans_pp_init(key, x: jnp.ndarray, k: int) -> jnp.ndarray:
 
     def body(i, carry):
         centers, key = carry
-        d = pairwise_sq_dists(x, centers)                    # (n, k)
+        d = pairwise_sq_dists(x, centers, use_kernel=use_kernel)  # (n, k)
         # only first i centers are valid
         valid = jnp.arange(k) < i
         d = jnp.where(valid[None, :], d, jnp.inf)
@@ -53,7 +54,7 @@ def kmeans(key, x: jnp.ndarray, k: int, iters: int = 50,
            use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Lloyd's algorithm with kmeans++ init. Returns (labels (N,), centers)."""
     x = x.astype(jnp.float32)
-    centers = _kmeans_pp_init(key, x, k)
+    centers = _kmeans_pp_init(key, x, k, use_kernel=use_kernel)
 
     def step(carry, _):
         centers = carry
@@ -101,7 +102,9 @@ def adjusted_rand_index(pred: np.ndarray, truth: np.ndarray) -> float:
     a = c2(cont.sum(axis=1)).sum()
     b = c2(cont.sum(axis=0)).sum()
     total = c2(n)
-    exp = a * b / total if total else 0.0
+    # promote before multiplying: a*b in int64 overflows (silently) once
+    # pair counts pass ~3e9, i.e. N ~ 1e5
+    exp = float(a) * float(b) / float(total) if total else 0.0
     mx = (a + b) / 2.0
     if mx == exp:
         return 1.0

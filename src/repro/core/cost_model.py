@@ -258,14 +258,19 @@ def round_cost_gathered(sp: SystemParams, u, D, p, g_sel, g_cloud, assign,
 
     u, D, p, g_sel, b, f: (H,) for the scheduled cohort, with g_sel the
     gain of each device to its *assigned* edge; assign: (H,) edge ids;
-    g_cloud: (M,). M must be static under jit (one-hot width).
+    g_cloud: (M,). M must be static under jit (segment count).
     Returns (T_i, E_i, T_m, E_m).
+
+    Per-edge reductions are segment ops over the assignment ids — O(H)
+    work and memory instead of the (H, M) one-hot panel, which is what
+    keeps cohort cost evaluation O(scheduled) when H is 10^4-10^5.
+    Edges with no assigned devices reduce to 0 (the one-hot semantics).
     """
     tc = t_cmp(sp, u, D, f) + t_com(sp, b, g_sel, p, model_bits)
     ec = e_cmp(sp, u, D, f) + e_com(sp, b, g_sel, p, model_bits)
-    onehot = jax.nn.one_hot(assign, M, dtype=tc.dtype)         # (H, M)
-    T_edge = sp.Q * jnp.max(onehot * tc[:, None], axis=0)       # (M,)
-    E_edge = sp.Q * jnp.sum(onehot * ec[:, None], axis=0)
+    T_edge = sp.Q * jnp.maximum(
+        jax.ops.segment_max(tc, assign, num_segments=M), 0.0)   # (M,)
+    E_edge = sp.Q * jax.ops.segment_sum(ec, assign, num_segments=M)
     T_cl, E_cl = cloud_cost(sp, g_cloud, model_bits)
     T_m = T_cl + T_edge
     E_m = E_cl + E_edge

@@ -1,4 +1,5 @@
 from repro.core.scheduling.schedulers import (  # noqa: F401
-    FedAvgScheduler, VKCScheduler, IKCScheduler, Scheduler)
+    FedAvgScheduler, VKCScheduler, IKCScheduler, Scheduler,
+    SerialFedAvgScheduler, SerialVKCScheduler, SerialIKCScheduler)
 from repro.core.scheduling.device_clustering import (  # noqa: F401
     run_device_clustering, auxiliary_weight_vectors)

@@ -474,7 +474,13 @@ class SweepRunner:
             # lanes up from their unscheduled pool (Alg. 3/4 lines 12-15)
             # so every lane shares one (S, H) shape.
             H = max(len(s) for s in scheds)
-            scheds = [np.asarray(_topup(list(s), self.N, H, rngs[i]))
+            # route through the scheduler's topup_to so rotation-state
+            # policies (IKC) record the extra picks in G_k; plain _topup
+            # covers caller-supplied scheduler objects without one.
+            scheds = [np.asarray(
+                          schedulers[i].topup_to(s, H, rngs[i])
+                          if hasattr(schedulers[i], "topup_to")
+                          else _topup(list(s), self.N, H, rngs[i]))
                       if len(s) < H else s
                       for i, s in enumerate(scheds)]
             assigns = [assigns[s] if done[s]

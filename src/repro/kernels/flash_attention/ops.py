@@ -8,7 +8,9 @@ from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # interpret-mode emulation is only needed where Mosaic can't compile:
+    # CPU. On TPU (and GPU via mosaic-gpu) run the compiled kernel.
+    return jax.default_backend() in ("cpu",)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

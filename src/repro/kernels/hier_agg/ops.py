@@ -22,7 +22,9 @@ from repro.kernels.hier_agg.hier_agg import (
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # interpret-mode emulation is only needed where Mosaic can't compile:
+    # CPU. On TPU (and GPU via mosaic-gpu) run the compiled kernel.
+    return jax.default_backend() in ("cpu",)
 
 
 def _bcast(x, batched, axis_size):

@@ -62,6 +62,52 @@ def test_ari_random_near_zero():
     assert abs(np.mean(vals)) < 0.05
 
 
+def test_ari_large_n_no_int64_overflow():
+    """Regression (ISSUE 6): at N=2e5 with few clusters the pair-count
+    product a*b passes int64 max and silently overflowed pre-fix. Must
+    match the direct float-promoted formula exactly."""
+    rng = np.random.default_rng(0)
+    n = 200_000
+    a = rng.integers(0, 3, n)
+    b = np.where(rng.random(n) < 0.2, rng.integers(0, 3, n), a)
+    got = adjusted_rand_index(a, b)
+
+    # direct float formula on the same contingency table
+    cont = np.zeros((3, 3))
+    np.add.at(cont, (a, b), 1)
+    def c2(v):
+        v = v.astype(np.float64)
+        return v * (v - 1) / 2
+    sum_ij = c2(cont).sum()
+    ai = c2(cont.sum(axis=1)).sum()
+    bj = c2(cont.sum(axis=0)).sum()
+    total = n * (n - 1) / 2
+    want = (sum_ij - ai * bj / total) / ((ai + bj) / 2 - ai * bj / total)
+    assert got == pytest.approx(want, rel=1e-9)
+    assert 0.5 < got < 0.9                 # ~80% agreement, 3 clusters
+
+
+def test_kmeans_pp_init_threads_kernel_flag(monkeypatch):
+    """Regression (ISSUE 6): kmeans(use_kernel=True) must take the
+    kernel distance path during kmeans++ init too, not only in the Lloyd
+    steps (pre-fix the init call dropped the flag)."""
+    import repro.core.clustering as cl
+    calls = []
+    real = cl.pairwise_sq_dists
+
+    def spy(x, c, use_kernel=False):
+        calls.append(use_kernel)
+        return real(x, c, use_kernel=use_kernel)
+
+    monkeypatch.setattr(cl, "pairwise_sq_dists", spy)
+    # unique shapes so the jit cache cannot serve a pre-spy trace
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(33, 17)),
+                    dtype=jnp.float32)
+    cl.kmeans(jax.random.PRNGKey(1), x, 3, iters=2, use_kernel=True)
+    assert calls, "spy never saw a distance call"
+    assert all(calls), f"init/step dropped use_kernel: {calls}"
+
+
 def test_pallas_kernel_path_matches_jnp_path():
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.normal(0, 1, (50, 64)).astype(np.float32))

@@ -24,6 +24,7 @@ KEY = jax.random.PRNGKey(0)
     (256, 512, 128),    # exact tiles
     (5, 7, 2),          # tiny
     (300, 1024, 16),
+    (64, 600, 200),     # K > BK: multiple centroid-panel grid blocks
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_kmeans_dist_sweep(N, P, K, dtype):
@@ -42,6 +43,20 @@ def test_kmeans_dist_is_actually_squared_distance():
     c = jnp.array([[0.0, 0.0]])
     out = pairwise_sq_dists(x, c, interpret=True)
     np.testing.assert_allclose(np.asarray(out), [[0.0], [25.0]], atol=1e-5)
+
+
+def test_default_interpret_gates_on_cpu_only(monkeypatch):
+    """Regression (ISSUE 6): interpret-mode emulation is a CPU fallback;
+    pre-fix the gate was ``!= "tpu"``, forcing interpret on real GPUs."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    from repro.kernels.hier_agg import ops as ha_ops
+    from repro.kernels.kmeans_dist import ops as kd_ops
+
+    for backend, expect in [("cpu", True), ("gpu", False), ("tpu", False)]:
+        monkeypatch.setattr(jax, "default_backend", lambda b=backend: b)
+        for mod in (kd_ops, ha_ops, fa_ops):
+            assert mod._default_interpret() is expect, (
+                mod.__name__, backend)
 
 
 # ------------------------------------------------------------ hier_agg

@@ -1,0 +1,157 @@
+"""Vectorized schedulers vs the serial list-based oracles: per-round
+cohort distribution equivalence, rotation invariants, empty-cluster
+top-up, the SweepRunner K' < K short-cohort contract — and the Alg.-4
+top-up rotation regression (a topped-up device must land in its
+cluster's G_k, not stay re-pickable in C_k)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduling.schedulers import (
+    FedAvgScheduler, IKCScheduler, SerialFedAvgScheduler,
+    SerialIKCScheduler, SerialVKCScheduler, VKCScheduler)
+
+
+def _freqs(sched_cls, args, rounds, seed, n):
+    rng = np.random.default_rng(seed)
+    s = sched_cls(*args)
+    f = np.zeros(n, int)
+    for _ in range(rounds):
+        sel = s.schedule(rng)
+        assert len(set(sel.tolist())) == len(sel)
+        f[sel] += 1
+    return f
+
+
+@pytest.mark.parametrize("vec_cls,ser_cls,args_of", [
+    (FedAvgScheduler, SerialFedAvgScheduler, lambda c: (len(c), 12)),
+    (VKCScheduler, SerialVKCScheduler, lambda c: (c, 2)),
+    (IKCScheduler, SerialIKCScheduler, lambda c: (c, 2)),
+])
+def test_selection_frequencies_match_serial(vec_cls, ser_cls, args_of):
+    """Both engines must induce the same per-device selection law: run R
+    rounds of each and compare every device's frequency against the
+    other engine's within binomial noise (5 sigma)."""
+    rng = np.random.default_rng(0)
+    n, k = 60, 4
+    clusters = rng.integers(0, k, n)
+    clusters[:k] = np.arange(k)
+    rounds = 800
+    fv = _freqs(vec_cls, args_of(clusters), rounds, seed=1, n=n)
+    fs = _freqs(ser_cls, args_of(clusters), rounds, seed=2, n=n)
+    assert fv.sum() == fs.sum()                    # identical cohort sizes
+    # binomial std of a per-device count, using the serial engine's
+    # empirical rate as the reference law
+    q = fs / rounds
+    sigma = np.sqrt(rounds * q * (1 - q)).clip(min=1.0)
+    assert np.all(np.abs(fv - fs) <= 5.0 * sigma), (
+        np.abs(fv - fs) / sigma)
+
+
+@pytest.mark.parametrize("cls", [IKCScheduler, SerialIKCScheduler])
+def test_ikc_rotation_blocks_match_serial_invariant(cls):
+    """With clusters an exact multiple of h, every cnt/h-round block is
+    one rotation: each device scheduled exactly once — in BOTH engines."""
+    rng = np.random.default_rng(11)
+    per, k, h = 12, 5, 3
+    clusters = np.repeat(np.arange(k), per)
+    s = cls(clusters, h)
+    for _ in range(3):                              # three full rotations
+        counts = np.zeros(len(clusters), int)
+        for _ in range(per // h):
+            counts[s.schedule(rng)] += 1
+        assert counts.min() == counts.max() == 1, counts
+
+
+@pytest.mark.parametrize("cls", [IKCScheduler, SerialIKCScheduler])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_ikc_topup_respects_rotation(cls, seed):
+    """Regression (ISSUE 6): devices scheduled through the top-up path
+    must enter their cluster's rotation set G_k. Cluster 0 has a single
+    device (short path, always scheduled), so each round's cohort is 2
+    cluster-1 picks + 1 cluster-1 top-up: 18 devices / 3 per round = one
+    full rotation in 6 rounds, with zero repeats. Pre-fix, top-up picks
+    stayed in C_k and were re-pickable next round."""
+    clusters = np.array([0] + [1] * 18)
+    rng = np.random.default_rng(seed)
+    s = cls(clusters, 2)                            # K=2, h=2, H=4
+    counts = np.zeros(19, int)
+    for _ in range(6):
+        sel = s.schedule(rng)
+        assert len(sel) == 4 and len(set(sel.tolist())) == 4
+        counts[sel] += 1
+    assert counts[0] == 6                           # the short cluster
+    assert counts[1:].min() == counts[1:].max() == 1, counts
+
+
+@pytest.mark.parametrize("cls", [VKCScheduler, SerialVKCScheduler,
+                                 IKCScheduler, SerialIKCScheduler])
+def test_empty_cluster_topup(cls):
+    """A label gap (K' < K: cluster 1 has no members) must not crash and
+    must still produce a full unique cohort via top-up."""
+    clusters = np.array([0] * 5 + [2] * 5)          # K=3, cluster 1 empty
+    rng = np.random.default_rng(5)
+    s = cls(clusters, 2)
+    for _ in range(4):
+        sel = s.schedule(rng)
+        assert len(sel) == 6
+        assert len(set(sel.tolist())) == 6
+        assert sel.min() >= 0 and sel.max() < 10
+
+
+def test_sweep_short_cohort_topup_records_rotation():
+    """The SweepRunner K' < K path calls ``topup_to`` beyond the
+    scheduler's own H; for IKC the extra picks must land in G_k (the
+    vectorized state's window tail) / the serial G_k list."""
+    clusters = np.repeat(np.arange(3), 8)
+    rng = np.random.default_rng(9)
+
+    s = IKCScheduler(clusters, 2)
+    sel = s.schedule(rng)
+    topped = s.topup_to(sel, 10, rng)
+    assert len(topped) == 10 and len(set(topped.tolist())) == 10
+    extra = topped[len(sel):]
+    st = s.state
+    for d in extra:
+        k = int(st.clusters[d])
+        rel = int(st.pos[d]) - int(st.offsets[k])
+        assert rel >= s.nf[k], (d, rel, s.nf[k])    # in the G_k window
+
+    ser = SerialIKCScheduler(clusters, 2)
+    sel = ser.schedule(rng)
+    topped = ser.topup_to(sel, 10, rng)
+    extra = topped[len(sel):]
+    for d in extra:
+        k = int(ser.clusters[d])
+        assert d in ser.G[k] and d not in ser.C[k]
+
+
+def test_vectorized_state_stays_consistent():
+    """After many rounds (normal, refill and top-up paths all taken) the
+    CSR state must remain a permutation with a correct inverse and
+    cluster-respecting windows."""
+    rng = np.random.default_rng(2)
+    clusters = rng.integers(0, 6, 150)
+    clusters[:6] = np.arange(6)
+    s = IKCScheduler(clusters, 4)
+    for _ in range(40):
+        s.schedule(rng)
+    st = s.state
+    assert np.array_equal(np.sort(st.order), np.arange(150))
+    assert np.array_equal(st.order[st.pos], np.arange(150))
+    for k in range(6):
+        win = st.order[st.offsets[k]:st.offsets[k + 1]]
+        assert np.all(clusters[win] == k)
+        assert 0 <= s.nf[k] <= st.counts[k]
+
+
+def test_fedavg_permutation_fallback_uniform():
+    """H > N/2 takes the materialized-pool path; still uniform and
+    duplicate-free."""
+    rng = np.random.default_rng(4)
+    s = FedAvgScheduler(10, 8)
+    f = np.zeros(10, int)
+    for _ in range(500):
+        sel = s.schedule(rng)
+        assert len(set(sel.tolist())) == 8
+        f[sel] += 1
+    assert np.all(np.abs(f - 400) < 5 * np.sqrt(500 * 0.8 * 0.2))
