@@ -6,11 +6,11 @@ Emits ``name,us_per_call,derived`` CSV lines (stdout). Heavy suites run at
 reduced scale by default (CPU container); EXPERIMENTS.md records the
 scale factors and validates the paper's *relative* claims. ``--smoke``
 restricts to the perf-tracking micro-benchmarks (engine / hfel /
-hier_agg / drl_train / sweep_shard / schedule_scale) at their tiny CI
-shapes — the
+hier_agg / drl_train / sweep_shard / sweep_fused / schedule_scale) at
+their tiny CI shapes — the
 bench-smoke CI job runs exactly
 that and uploads the ``results/*.json`` outputs as artifacts. ``--perf``
-runs the same six at full scale but writes the JSON under
+runs the same seven at full scale but writes the JSON under
 ``results/`` (gitignored), so the weekly CI job's artifacts are always
 freshly produced files, never the committed repo-root ``BENCH_*.json``.
 ``--check`` then compares the fresh smoke timings against the committed
@@ -152,7 +152,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
                          "engine|hfel|hier_agg|drl_train|sweep_shard|"
-                         "schedule_scale")
+                         "sweep_fused|schedule_scale")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     ap.add_argument("--smoke", action="store_true",
@@ -232,6 +232,10 @@ def main() -> None:
         from benchmarks import bench_sweep_shard
         _perf_bench(bench_sweep_shard, "sweep_shard")
 
+    def run_sweep_fused():
+        from benchmarks import bench_sweep_fused
+        _perf_bench(bench_sweep_fused, "sweep_fused")
+
     def run_schedule_scale():
         from benchmarks import bench_schedule_scale
         _perf_bench(bench_schedule_scale, "schedule_scale")
@@ -251,11 +255,12 @@ def main() -> None:
         ("hier_agg", run_hier_agg),
         ("drl_train", run_drl_train),
         ("sweep_shard", run_sweep_shard),
+        ("sweep_fused", run_sweep_fused),
         ("schedule_scale", run_schedule_scale),
     ]
     if args.smoke or args.perf:
         perf_names = ("engine", "hfel", "hier_agg", "drl_train",
-                      "sweep_shard", "schedule_scale")
+                      "sweep_shard", "sweep_fused", "schedule_scale")
         suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]

@@ -1,13 +1,18 @@
 """Quickstart: the paper's full pipeline on a pocket-sized world.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 
 1. builds a synthetic non-IID federated dataset (40 IoT devices),
 2. clusters devices with the IKC mini model (Algorithm 2),
 3. schedules a cohort (Algorithm 4), assigns it to edge servers,
 4. allocates bandwidth/CPU (problem 27), prices the round (eqs. 4-14),
 5. runs a few HFL global iterations (Algorithm 1) and prints accuracy.
+
+``--smoke`` shrinks the world to CI-guard size (the examples-smoke job
+runs it on every push: the point is that the public entry points still
+execute, not the accuracy it reaches).
 """
+import argparse
 import time
 
 
@@ -17,18 +22,27 @@ from repro.data import make_dataset, partition_noniid
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny world / 2 rounds (CI smoke)")
+    args = ap.parse_args()
     t0 = time.time()
-    sp = SystemParams(n_devices=40, n_edges=5, d_range=(50, 90))
+    n_dev = 12 if args.smoke else 40
+    sp = SystemParams(n_devices=n_dev, n_edges=5, d_range=(50, 90))
     pop = sample_population(sp, seed=0)
-    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=5000, n_test=800,
-                                seed=0)
-    fed = partition_noniid(X, y, Xt, yt, n_devices=40, size_range=(50, 90),
+    n_train, n_test = (600, 150) if args.smoke else (5000, 800)
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=n_train,
+                                n_test=n_test, seed=0)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=n_dev,
+                           size_range=(20, 40) if args.smoke else (50, 90),
                            seed=0)
     print(f"[{time.time()-t0:5.1f}s] world ready: {fed.n_devices} devices, "
           f"{sp.n_edges} edges")
 
-    cfg = FrameworkConfig(scheduler="ikc", assigner="geo", H=20, K=10,
-                          target_acc=0.70, max_iters=6, seed=0)
+    cfg = FrameworkConfig(scheduler="ikc", assigner="geo",
+                          H=6 if args.smoke else 20, K=4 if args.smoke else 10,
+                          target_acc=0.70, max_iters=2 if args.smoke else 6,
+                          seed=0)
     fw = HFLFramework(sp, pop, fed, cfg)
     cs = fw.clustering_stats
     print(f"[{time.time()-t0:5.1f}s] IKC clustering: ARI={cs['ari']:.2f} "

@@ -16,7 +16,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.drl.d3qn import q_values_all_t_jit, q_values_batch_jit
+from repro.drl.d3qn import (q_values_all_t, q_values_all_t_jit,
+                            q_values_batch_jit)
+
+
+def drl_features_traced(u, D, p, g, sched_idx):
+    """Traced twin of ``repro.drl.train.drl_features``: gather the
+    scheduled cohort from full-population feature columns, convert gains
+    to dB and min-max normalise per eq. (24) — all in jnp ops so the
+    fused sweep scan can deploy the agent in-trace. u/D/p (N,), g (N, M),
+    sched_idx (H,) -> (H, M+3) f32 features. Matches the host path's
+    ``Population.features()`` column order (g | u | D | p); arithmetic
+    runs in f32 on device vs the host's f64 (sub-ulp differences only
+    matter on exact Q-value ties)."""
+    feats = jnp.concatenate(
+        [g, u[:, None], D[:, None], p[:, None]], axis=1)[sched_idx]
+    M = g.shape[1]
+    gains_db = 10.0 * jnp.log10(jnp.maximum(feats[:, :M], 1e-30))
+    feats = jnp.concatenate([gains_db, feats[:, M:]], axis=1)
+    lo = feats.min(axis=-2, keepdims=True)
+    hi = feats.max(axis=-2, keepdims=True)
+    return ((feats - lo) / jnp.maximum(hi - lo, 1e-12)).astype(jnp.float32)
+
+
+def drl_assign_traced(params, u, D, p, g, sched_idx):
+    """Traced twin of ``DRLAssigner.assign``: greedy (argmax-Q) edge per
+    scheduled device through the pure ``q_values_all_t`` trunk, so the
+    whole deployment — feature build, BiLSTM encode, dueling heads,
+    argmax — stays inside the caller's trace with no host round-trip.
+    Returns (H,) int32 edge ids."""
+    feats = drl_features_traced(u, D, p, g, sched_idx)
+    q = q_values_all_t(params, feats)
+    return jnp.argmax(q, axis=-1).astype(jnp.int32)
 
 
 @dataclasses.dataclass

@@ -3,9 +3,24 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
+
+
+def geo_assign_traced(dev_pos, edge_pos, sched_idx):
+    """Traced twin of ``GeoAssigner.assign``: nearest edge per scheduled
+    device, computed with jnp ops so the fused sweep scan can run the
+    geographic assigner in-trace (one (H, M) distance panel per lane,
+    vmap/shard_map-composable). dev_pos (N, 2), edge_pos (M, 2),
+    sched_idx (H,) -> (H,) int32 edge ids. Ties break to the first
+    minimum like ``np.argmin``; distances are f32 on device vs the
+    host's f64, so a near-exact tie could in principle flip — sweeps
+    are seeded, making any such flip deterministic per world."""
+    d2 = jnp.sum(jnp.square(dev_pos[sched_idx][:, None] - edge_pos[None]),
+                 axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
 
 
 @dataclasses.dataclass

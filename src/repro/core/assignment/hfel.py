@@ -129,6 +129,154 @@ def _accept_scan_pops(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid,
     )(J, edges, Tn, En, T0, E0, cur0, T_cl, E_cl, lam, valid)
 
 
+def _round_plan(n_transfer: int, n_exchange: int, K: int):
+    """Static per-round (kind, budget) plan of the K-candidate search:
+    ``ceil(n_transfer/K)`` transfer rounds then ``ceil(n_exchange/K)``
+    exchange rounds, the last round of each phase carrying the remainder
+    budget — the same trial accounting as the host engines' while loops,
+    laid out as arrays so a ``lax.scan`` can consume it."""
+    kinds, budgets = [], []
+    for kind, budget in ((_TRANSFER, n_transfer), (_EXCHANGE, n_exchange)):
+        remaining = int(budget)
+        while remaining > 0:
+            k = min(K, remaining)
+            remaining -= k
+            kinds.append(kind)
+            budgets.append(k)
+    return np.asarray(kinds, np.int32), np.asarray(budgets, np.int32)
+
+
+def hfel_search_traced(sp: cm.SystemParams, u, D, p, g, B_m, g_cloud, key,
+                       *, n_transfer: int = 40, n_exchange: int = 80,
+                       n_candidates: int = 16, alloc_steps: int = 100,
+                       warm_steps: Optional[int] = None,
+                       accept_top: int = 4):
+    """Fully-traced K-candidate HFEL search — the fused sweep scan's
+    assignment engine (``SweepRunner.run(assign="hfel", fused=True)``).
+
+    Same move neighborhood, warm-started trial solves and sorted accept
+    pass as ``HFELAssigner._search_batched``, but every stage — proposal
+    sampling, candidate-assignment scatter, trial-array assembly, the
+    accept commit — is jnp ops under one ``lax.scan`` over the static
+    ``_round_plan``, so the whole search composes with ``vmap`` (one
+    search per sweep lane) and ``shard_map`` with zero host round-trips.
+    Differences from the host engine, by design:
+
+    * proposals draw from the JAX PRNG ``key`` (one split per round),
+      not a numpy Generator — decisions match the host engine in
+      *distribution*, not bitwise;
+    * no carry-over list: an improving-but-blocked move is simply
+      re-proposable in a later round (a data-dependent carry list cannot
+      live in a fixed-shape scan). Quality parity with the host engine
+      is pinned statistically in ``tests/test_sweep_fused.py``.
+
+    u/D/p (H,) cohort features, g (H, M) cohort gains, B_m (M,),
+    g_cloud (M,), key a PRNG key. Returns (assign (H,) int32, J scalar)
+    like ``HFELAssigner.assign``.
+    """
+    H, M = g.shape
+    K = max(1, int(n_candidates))
+    if K > min(H * M, H * H):
+        raise ValueError(f"n_candidates={K} exceeds the move "
+                         f"neighborhood (H={H}, M={M})")
+    warm = warm_steps or max(25, (2 * alloc_steps) // 5)
+    T_cl, E_cl = cm.cloud_cost(sp, g_cloud)
+    T_cl = jnp.asarray(T_cl, jnp.float32)
+    E_cl = jnp.asarray(E_cl, jnp.float32)
+    lam = jnp.asarray(sp.lam, jnp.float32)
+    gT = jnp.asarray(g).T                                   # (M, H)
+    assign0 = jnp.argmax(g, axis=1).astype(jnp.int32)
+
+    # cold solve of all M incumbent edges at full fidelity
+    edge_ids = jnp.arange(M)
+    res0, (tb0, tf0) = ra.allocate_batch_warm(
+        sp, jnp.broadcast_to(u, (M, H)), jnp.broadcast_to(D, (M, H)),
+        jnp.broadcast_to(p, (M, H)), gT, jnp.asarray(B_m),
+        assign0[None, :] == edge_ids[:, None],
+        jnp.zeros((M, H), jnp.float32), jnp.ones((M, H), jnp.float32),
+        steps=alloc_steps)
+    T0 = jnp.asarray(res0.T_edge, jnp.float32)
+    E0 = jnp.asarray(res0.E_edge, jnp.float32)
+    cur0 = jnp.asarray(_objective(T0, E0, T_cl, E_cl, lam), jnp.float32)
+
+    kinds, budgets = _round_plan(n_transfer, n_exchange, K)
+    rowsK = jnp.arange(K)
+
+    def round_step(carry, xs):
+        assign, T, E, tb, tf, cur, key = carry
+        kind, k_budget = xs
+        key, k_t, k_e = jax.random.split(key, 3)
+        # both proposal kinds are drawn branchlessly and selected on the
+        # (traced) round kind — the unused draw is cheap (two argsorts)
+        raw_t = jax.random.permutation(k_t, H * M)[:K]
+        h_t, dst = raw_t // M, raw_t % M
+        ok_t = assign[h_t] != dst
+        raw_e = jax.random.permutation(k_e, H * H)[:K]
+        h1, h2 = raw_e // H, raw_e % H
+        ok_e = (h1 != h2) & (assign[h1] != assign[h2])
+        is_t = kind == _TRANSFER
+        # unified move layout: device d0 -> edge v0, device d1 -> edge v1
+        # (transfer: d0 == d1 == the moved device), affected edges (e0, e1)
+        d0 = jnp.where(is_t, h_t, h1)
+        d1 = jnp.where(is_t, h_t, h2)
+        v0 = jnp.where(is_t, dst, assign[h2]).astype(assign.dtype)
+        v1 = jnp.where(is_t, dst, assign[h1]).astype(assign.dtype)
+        e0 = jnp.where(is_t, assign[h_t], assign[h1])
+        e1 = jnp.where(is_t, dst, assign[h2])
+        valid = jnp.where(is_t, ok_t, ok_e) & (rowsK < k_budget)
+
+        cand = jnp.repeat(assign[None], K, axis=0)
+        cand = cand.at[rowsK, d0].set(v0).at[rowsK, d1].set(v1)
+        edges = jnp.stack([e0, e1], axis=1)                 # (K, 2)
+        masks = cand[:, None, :] == edges[:, :, None]       # (K, 2, H)
+        flat = ra.flatten_trials(
+            jnp.broadcast_to(u, (K, 2, H)), jnp.broadcast_to(D, (K, 2, H)),
+            jnp.broadcast_to(p, (K, 2, H)), gT[edges],
+            jnp.asarray(B_m)[edges], masks, tb[edges], tf[edges])
+        res, (tb_f, tf_f) = ra.allocate_batch_warm(sp, *flat, steps=warm)
+        res = ra.unflatten_trials(res, K, 2)
+        Tn = jnp.asarray(res.T_edge, jnp.float32)           # (K, 2)
+        En = jnp.asarray(res.E_edge, jnp.float32)
+        tb_n = tb_f.reshape(K, 2, H)
+        tf_n = tf_f.reshape(K, 2, H)
+
+        T2 = jnp.repeat(T[None], K, axis=0).at[rowsK[:, None], edges].set(Tn)
+        E2 = jnp.repeat(E[None], K, axis=0).at[rowsK[:, None], edges].set(En)
+        J = jnp.where(valid, _objective(T2, E2, T_cl, E_cl, lam), jnp.inf)
+        order = jnp.argsort(J)
+        T_out, E_out, cur_out, acc, _ = _accept_scan_core(
+            J[order], edges[order], Tn[order], En[order], T, E, cur,
+            T_cl, E_cl, lam, valid[order], accept_top=accept_top)
+
+        # commit accepted moves; accepted sets are edge-disjoint hence
+        # device-disjoint, so round-start (d, v) values compose exactly
+        def commit(i, st):
+            a_, tb_, tf_ = st
+            idx = order[i]
+            on = acc[i]
+            a_ = a_.at[d0[idx]].set(jnp.where(on, v0[idx], a_[d0[idx]]))
+            a_ = a_.at[d1[idx]].set(jnp.where(on, v1[idx], a_[d1[idx]]))
+            tb_ = tb_.at[edges[idx]].set(
+                jnp.where(on, tb_n[idx], tb_[edges[idx]]))
+            tf_ = tf_.at[edges[idx]].set(
+                jnp.where(on, tf_n[idx], tf_[edges[idx]]))
+            return a_, tb_, tf_
+
+        assign, tb, tf = jax.lax.fori_loop(0, K, commit, (assign, tb, tf))
+        return (assign, T_out, E_out, tb, tf, cur_out, key), None
+
+    carry0 = (assign0, T0, E0, jnp.asarray(tb0), jnp.asarray(tf0),
+              cur0, key)
+    (assign, _, _, _, _, cur, _), _ = jax.lax.scan(
+        round_step, carry0, (jnp.asarray(kinds), jnp.asarray(budgets)))
+    return assign, cur
+
+
+hfel_search_traced_jit = functools.partial(jax.jit, static_argnames=(
+    "sp", "n_transfer", "n_exchange", "n_candidates", "alloc_steps",
+    "warm_steps", "accept_top"))(hfel_search_traced)
+
+
 def _edges_eval_warm(sp, feats, assign, edges, B, steps, tb0, tf0):
     """Resource-allocate a subset of edges in ONE batched jit call.
 

@@ -33,6 +33,7 @@ pre-fix code left top-up picks in C_k).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Sequence
 
 import numpy as np
@@ -539,3 +540,51 @@ class IKCScheduler(Scheduler):
                 st.order[last], st.order[p] = d, other
                 st.pos[d], st.pos[other] = last, p
                 self.nf[k] -= 1
+
+
+# --------------------------------------------------------------------------
+# traced scheduler (fused sweep scan)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedFedAvg:
+    """In-scan FedAvg scheduler for the fused sweep engine.
+
+    The host schedulers above are numpy state machines, so a fused
+    R-round ``lax.scan`` cannot call them mid-trace; ``TracedFedAvg``
+    is the traced counterpart whose entire state — one JAX PRNG key per
+    lane — is a *carried pytree*: ``init_state`` builds it host-side,
+    ``step`` consumes and returns it inside the scan (split the key,
+    take the first H of a random permutation of the N devices — the
+    same uniform-without-replacement draw as ``FedAvgScheduler``, from
+    the JAX stream instead of numpy's, so the two match in distribution
+    but not bitwise). Stateful policies (IKC/VKC rotation sets) stay
+    host-side: ``SweepRunner.run(fused=...)`` precomputes their (R, S,
+    H) schedule tensor up front and feeds it to the scan as ``xs``,
+    which is exact because scheduling never depends on training state.
+    """
+    n_devices: int
+    H: int
+
+    def __post_init__(self):
+        if not 0 < self.H <= self.n_devices:
+            raise ValueError(f"need 0 < H <= N, got H={self.H}, "
+                             f"N={self.n_devices}")
+
+    def init_state(self, seed: int):
+        """Per-lane carried state: a PRNG key (host-side, once)."""
+        import jax
+        return jax.random.PRNGKey(seed)
+
+    def step(self, state):
+        """One traced scheduling round: (state) -> (new_state, sched).
+
+        Pure jnp — callable under jit/vmap/scan. Splits the carried key
+        and returns H distinct uniform device ids as int32.
+        """
+        import jax
+        import jax.numpy as jnp
+        key, sub = jax.random.split(state)
+        sched = jax.random.permutation(sub, self.n_devices)[:self.H]
+        return key, sched.astype(jnp.int32)

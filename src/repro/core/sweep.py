@@ -27,12 +27,14 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.core import cost_model as cm
-from repro.core.assignment.geo import GeoAssigner
+from repro.core.assignment.drl import drl_assign_traced
+from repro.core.assignment.geo import GeoAssigner, geo_assign_traced
+from repro.core.assignment.hfel import hfel_search_traced
 from repro.core.framework import round_step_core
 from repro.core.hfl import hfl_global_iteration_core, pad_device_data
 from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
                                    VKCScheduler, run_device_clustering)
-from repro.core.scheduling.schedulers import _topup
+from repro.core.scheduling.schedulers import TracedFedAvg, _topup
 from repro.data.partition import FederatedData
 from repro.models import cnn
 from repro.utils import tree_bytes
@@ -235,13 +237,190 @@ def sweep_round_sharded(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
                    y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b)
 
 
-@functools.partial(jax.jit, static_argnames=("apply_fn",))
-def _sweep_eval(apply_fn, params_b, Xt_b, yt_b):
+def _sweep_eval_lanes(apply_fn, params_b, Xt_b, yt_b):
+    """Traceable lane-vmapped full-batch test accuracy — shared by the
+    per-round ``_sweep_eval`` jit and the in-scan eval of the fused
+    sweep (where it feeds the done-mask early-exit)."""
     return jax.vmap(
         lambda prm, Xt, yt: jnp.mean(
             (jnp.argmax(apply_fn(prm, Xt), axis=-1) == yt)
             .astype(jnp.float32))
     )(params_b, Xt_b, yt_b)
+
+
+_sweep_eval = functools.partial(jax.jit, static_argnames=("apply_fn",))(
+    _sweep_eval_lanes)
+
+
+# ------------------------------------------------------------ fused scan
+
+_HFEL_FUSED_DEFAULTS = dict(n_transfer=40, n_exchange=80, n_candidates=16,
+                            warm_steps=None, accept_top=4)
+
+
+def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
+                      g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b,
+                      dev_pos_b, edge_pos_b, Xt_b, yt_b, sched_rs,
+                      sched_state_b, assign_keys_b, done_b, drl_params, lr,
+                      *, M: int, L: int, Q: int, alloc_steps: int,
+                      train_only: bool, agg_kernel: bool,
+                      lane_chunk: Optional[int], assign: str, hfel_cfg,
+                      target_acc: Optional[float], n_rounds: int,
+                      traced_sched):
+    """Traceable R-round S-lane sweep body: ``lax.scan`` over rounds of
+    (scheduler step -> traced assignment -> lane-vmapped round body ->
+    in-scan eval -> done-mask update). Shared by the single-device
+    ``sweep_scan`` jit and the ``shard_map`` blocks of
+    ``sweep_scan_sharded``.
+
+    Scheduling comes either from the precomputed ``sched_rs`` (R, S, H)
+    tensor (host schedulers; ``traced_sched=None``) or, with a
+    ``traced_sched`` ``TracedFedAvg``, from in-scan draws against the
+    carried ``sched_state_b`` pytree (one PRNG key per lane).
+    Assignment (``assign`` in mod|geo|drl|hfel) runs fully in-trace per
+    round; hfel consumes one split of the carried ``assign_keys_b`` per
+    round (split unconditionally for every assigner so the carry
+    structure — and hence fused-vs-oracle parity — is mode-independent).
+    The done-mask semantics mirror the host loop exactly: a lane's
+    round outputs are recorded, then its done flag absorbs
+    ``acc >= target_acc``, freezing it from the NEXT round on.
+
+    Returns ((params_b, done_b, sched_state_b, assign_keys_b),
+    (acc (R, S), T_i (R, S), E_i (R, S))).
+    """
+    hfel_kw = dict(hfel_cfg) if hfel_cfg is not None else None
+
+    def assign_lane(u, D, p, g, g_cloud, B_m, dev_pos, edge_pos, sched,
+                    key):
+        if assign == "mod":
+            return (sched % M).astype(jnp.int32)
+        if assign == "geo":
+            return geo_assign_traced(dev_pos, edge_pos, sched)
+        if assign == "drl":
+            return drl_assign_traced(drl_params, u, D, p, g, sched)
+        a, _ = hfel_search_traced(
+            sp_assign, u[sched], D[sched], p[sched], g[sched], B_m,
+            g_cloud, key, alloc_steps=alloc_steps, **hfel_kw)
+        return a
+
+    def step(carry, xs):
+        params_b, done_b, sched_state_b, keys_b = carry
+        if traced_sched is None:
+            sched_b = xs
+        else:
+            sched_state_b, sched_b = jax.vmap(traced_sched.step)(
+                sched_state_b)
+        splits = jax.vmap(jax.random.split)(keys_b)        # (S, 2, 2)
+        keys_b, sub_b = splits[:, 0], splits[:, 1]
+        assign_b = jax.vmap(assign_lane)(
+            u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, dev_pos_b, edge_pos_b,
+            sched_b, sub_b)
+        new_params, (T_i, E_i) = _sweep_round_lanes(
+            apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
+            X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b,
+            M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
+            agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+        acc = _sweep_eval_lanes(apply_fn, new_params, Xt_b, yt_b)
+        if target_acc is not None:
+            done_b = done_b | (acc >= target_acc)
+        return (new_params, done_b, sched_state_b, keys_b), (acc, T_i, E_i)
+
+    carry0 = (params_b, done_b, sched_state_b, assign_keys_b)
+    xs = sched_rs if traced_sched is None else None
+    return jax.lax.scan(step, carry0, xs,
+                        length=n_rounds if xs is None else None)
+
+
+_SCAN_STATICS = ("apply_fn", "sp", "sp_assign", "M", "L", "Q",
+                 "alloc_steps", "train_only", "agg_kernel", "lane_chunk",
+                 "assign", "hfel_cfg", "target_acc", "n_rounds",
+                 "traced_sched")
+
+
+@functools.partial(jax.jit, static_argnames=_SCAN_STATICS)
+def sweep_scan(apply_fn, sp: cm.SystemParams, sp_assign, params_b, u_b,
+               D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b,
+               dev_pos_b, edge_pos_b, Xt_b, yt_b, sched_rs, sched_state_b,
+               assign_keys_b, done_b, drl_params, lr, *, M: int, L: int,
+               Q: int, alloc_steps: int, train_only: bool = False,
+               agg_kernel: bool = False, lane_chunk: Optional[int] = None,
+               assign: str = "geo", hfel_cfg=None,
+               target_acc: Optional[float] = None, n_rounds: int = 1,
+               traced_sched=None):
+    """An R-round, S-lane sweep as ONE jitted dispatch.
+
+    The whole-sweep analogue of ``sweep_round``: scheduling, assignment
+    (including the traced HFEL K-candidate search and D3QN deployment),
+    R rounds of the fused engine, per-round eval and the done-mask
+    early-exit all live inside a single ``lax.scan`` — zero host
+    round-trips between rounds. Population/data arrays as in
+    ``sweep_round`` plus dev_pos_b/edge_pos_b (S, ·, 2) positions
+    (traced geo) and Xt_b/yt_b test stacks (in-scan eval).
+    ``sp_assign`` is the SystemParams the hfel objective scores with
+    (the host path's assigner uses the un-patched sweep params, not the
+    model-bits-patched round ``sp``). See ``_sweep_scan_lanes`` for the
+    scheduling/assignment operand semantics and the carry layout.
+    """
+    return _sweep_scan_lanes(
+        apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b, g_b, g_cloud_b,
+        B_m_b, X_b, y_b, mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b,
+        yt_b, sched_rs, sched_state_b, assign_keys_b, done_b, drl_params,
+        lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
+        agg_kernel=agg_kernel, lane_chunk=lane_chunk, assign=assign,
+        hfel_cfg=hfel_cfg, target_acc=target_acc, n_rounds=n_rounds,
+        traced_sched=traced_sched)
+
+
+@functools.partial(jax.jit, static_argnames=_SCAN_STATICS + ("mesh",))
+def sweep_scan_sharded(apply_fn, sp: cm.SystemParams, sp_assign, params_b,
+                       u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
+                       mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b, yt_b,
+                       sched_rs, sched_state_b, assign_keys_b, done_b,
+                       drl_params, lr, *, M: int, L: int, Q: int,
+                       alloc_steps: int, mesh, train_only: bool = False,
+                       agg_kernel: bool = False,
+                       lane_chunk: Optional[int] = None,
+                       assign: str = "geo", hfel_cfg=None,
+                       target_acc: Optional[float] = None,
+                       n_rounds: int = 1, traced_sched=None):
+    """``sweep_scan`` laid out over a 1-D ``Mesh(("lane",))``.
+
+    Each device runs the ENTIRE R-round scan — traced scheduling,
+    assignment search, round body, eval, done-mask — on its S/d lane
+    block as one SPMD program: still exactly one dispatch for the whole
+    sweep, now lane-parallel. Lanes are independent, so there are no
+    collectives; the (R, S, H) schedule tensor and the (R, S) outputs
+    shard on their lane axis only (``parallel.sharding.round_lane_spec``).
+    S must be a multiple of the device count (``SweepRunner`` pads with
+    dead done-masked lanes, exactly as in ``sweep_round_sharded``).
+    """
+    from repro.parallel.sharding import round_lane_spec
+    lane, rep = PartitionSpec("lane"), PartitionSpec()
+    rlane = round_lane_spec()
+
+    def block(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
+              mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b, yt_b,
+              sched_rs, sched_state_b, assign_keys_b, done_b, drl_params,
+              lr):
+        return _sweep_scan_lanes(
+            apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b, g_b,
+            g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, dev_pos_b,
+            edge_pos_b, Xt_b, yt_b, sched_rs, sched_state_b,
+            assign_keys_b, done_b, drl_params, lr, M=M, L=L, Q=Q,
+            alloc_steps=alloc_steps, train_only=train_only,
+            agg_kernel=agg_kernel, lane_chunk=lane_chunk, assign=assign,
+            hfel_cfg=hfel_cfg, target_acc=target_acc, n_rounds=n_rounds,
+            traced_sched=traced_sched)
+
+    sharded = shard_map(
+        block, mesh=mesh,
+        in_specs=(lane,) * 15 + (rlane, lane, lane, lane, rep, rep),
+        out_specs=((lane, lane, lane, lane), (rlane, rlane, rlane)),
+        check_rep=False)
+    return sharded(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
+                   y_b, mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b,
+                   yt_b, sched_rs, sched_state_b, assign_keys_b, done_b,
+                   drl_params, lr)
 
 
 def _mod_assign(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
@@ -365,6 +544,10 @@ class SweepRunner:
         self.g_b = jnp.stack([p.g for p in self.pops])
         self.g_cloud_b = jnp.stack([p.g_cloud for p in self.pops])
         self.B_m_b = jnp.stack([p.B_m for p in self.pops])
+        self.dev_pos_b = jnp.stack(
+            [jnp.asarray(p.dev_pos) for p in self.pops])
+        self.edge_pos_b = jnp.stack(
+            [jnp.asarray(p.edge_pos) for p in self.pops])
 
         hw = self.feds[0].X_test.shape[1:3]
         ch = self.feds[0].X_test.shape[3]
@@ -393,7 +576,8 @@ class SweepRunner:
             return jax.device_put(a, sh)
 
         for name in ("X_b", "y_b", "mask_b", "Xt_b", "yt_b", "fed_sizes_b",
-                     "u_b", "D_b", "p_b", "g_b", "g_cloud_b", "B_m_b"):
+                     "u_b", "D_b", "p_b", "g_b", "g_cloud_b", "B_m_b",
+                     "dev_pos_b", "edge_pos_b"):
             setattr(self, name, prep(getattr(self, name)))
         self.params0 = jax.tree.map(prep, self.params0)
 
@@ -404,7 +588,9 @@ class SweepRunner:
             seeds: Optional[Sequence[int]] = None,
             target_acc: Optional[float] = None,
             sizes: str = "pop", train_only: bool = False,
-            drl_params=None) -> Dict:
+            drl_params=None, fused: Union[bool, str] = False,
+            assign_seed: int = 0,
+            hfel_opts: Optional[Dict] = None) -> Dict:
         """Run n_rounds of all S lanes; lane s uses schedulers[s].
 
         assign: "geo" | "mod" | "hfel" (batched K-candidate search via
@@ -423,11 +609,37 @@ class SweepRunner:
         skipped (the lane reuses its last schedule/assignment) and its
         T_i/E_i rows are zero from then on — and the loop breaks once
         every lane is done.
+
+        fused=True runs the whole sweep — scheduling, traced assignment,
+        R rounds, eval, done-mask — as ONE jitted dispatch
+        (``sweep_scan`` / ``sweep_scan_sharded``); ``fused="oracle"``
+        drives the identical traced step in a per-round host loop (one
+        dispatch per round) and is the fused path's parity baseline.
+        Fused mode needs a *named* assigner (mod/geo/drl/hfel — the
+        traced twins run in-scan; callables cannot be traced); hfel
+        proposals draw from a JAX key stream seeded by ``assign_seed``
+        (host-rng-free), tunable via ``hfel_opts`` (n_transfer,
+        n_exchange, n_candidates, warm_steps, accept_top — defaults
+        match ``make_hfel_assign``). Schedulers may be the host state
+        machines (their (R, S, H) schedules are precomputed up front —
+        exact, since scheduling never depends on training state) or
+        per-lane ``TracedFedAvg`` instances (drawn in-scan from carried
+        PRNG-key state). The result dict gains ``n_dispatches``.
+
         Returns {"acc": (S, R), "T_i": (S, R), "E_i": (S, R),
         "msg_bits_per_round": float, "iters": (S,) rounds to target_acc
         (or n_rounds), "obj": (S, R)} as numpy arrays.
         """
         assert len(schedulers) == self.S
+        if fused not in (False, True, "oracle"):
+            raise ValueError(f"fused must be False, True or 'oracle', "
+                             f"got {fused!r}")
+        if fused:
+            return self._run_fused(
+                schedulers, n_rounds, assign=assign, seeds=seeds,
+                target_acc=target_acc, sizes=sizes, train_only=train_only,
+                drl_params=drl_params, oracle=(fused == "oracle"),
+                assign_seed=assign_seed, hfel_opts=hfel_opts)
         if isinstance(assign, str):
             if assign == "hfel":
                 assign_fn = make_hfel_assign(self.sp,
@@ -535,6 +747,173 @@ class SweepRunner:
         return {"acc": acc_a, "T_i": T_a, "E_i": E_a,
                 "obj": E_a + sp.lam * T_a, "iters": iters,
                 "msg_bits_per_round": float(msg_bits), "H": H}
+
+    # --------------------------------------------------------- fused run
+
+    def _run_fused(self, schedulers: Sequence, n_rounds: int, *,
+                   assign, seeds, target_acc, sizes, train_only,
+                   drl_params, oracle: bool, assign_seed: int,
+                   hfel_opts) -> Dict:
+        """``run(fused=...)`` body: one ``sweep_scan`` dispatch for the
+        whole sweep (oracle=False) or a per-round host loop over the
+        identical traced step (oracle=True, the parity baseline)."""
+        if not isinstance(assign, str):
+            raise ValueError(
+                "fused sweeps need a named assigner (mod/geo/drl/hfel) — "
+                "callables cannot run inside the scan")
+        if assign not in ("mod", "geo", "drl", "hfel"):
+            raise ValueError(f"unknown assign {assign!r} for fused run")
+        if assign == "drl" and drl_params is None:
+            raise ValueError("assign='drl' needs drl_params (a trained "
+                             "D3QNTrainer.params pytree)")
+        if sizes not in ("pop", "fed"):
+            raise ValueError(f"sizes must be 'pop' or 'fed', got {sizes!r}")
+        if hfel_opts and assign != "hfel":
+            raise ValueError("hfel_opts only applies to assign='hfel'")
+        hfel_cfg = None
+        if assign == "hfel":
+            opts = dict(hfel_opts or {})
+            bad = set(opts) - set(_HFEL_FUSED_DEFAULTS)
+            if bad:
+                raise ValueError(
+                    f"unknown hfel_opts keys {sorted(bad)}; valid: "
+                    f"{sorted(_HFEL_FUSED_DEFAULTS)} (alloc_steps is the "
+                    "runner's constructor knob)")
+            hfel_cfg = tuple(sorted({**_HFEL_FUSED_DEFAULTS, **opts}.items()))
+        sizes_b = self.D_b if sizes == "pop" else self.fed_sizes_b
+        if seeds is None:
+            seeds = list(range(self.S))
+        sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
+
+        # -- scheduling: in-scan TracedFedAvg state, or an exact host
+        #    precompute (scheduling never reads training state, so the
+        #    (R, S, H) tensor reproduces the host loop's draws verbatim).
+        n_traced = sum(isinstance(s, TracedFedAvg) for s in schedulers)
+        if n_traced == self.S:
+            traced_sched = schedulers[0]
+            if any(s != traced_sched for s in schedulers):
+                raise ValueError(
+                    "fused TracedFedAvg lanes must share one (n_devices, "
+                    "H) config — per-lane variation lives in the seed")
+            H = traced_sched.H
+            states = [traced_sched.init_state(seeds[s])
+                      for s in range(self.S)]
+            states += [states[0]] * self._n_dead
+            sched_state_b = jnp.stack(states)
+            sched_rs = None
+        elif n_traced:
+            raise ValueError("cannot mix TracedFedAvg and host schedulers "
+                             "in one fused run")
+        else:
+            traced_sched = None
+            sched_state_b = None
+            rngs = [np.random.default_rng(s) for s in seeds]
+            rounds = []
+            H = None
+            for _ in range(n_rounds):
+                # identical rng-consumption order to the host loop: all
+                # lanes' schedule draws, then all lanes' topups.
+                scheds = [np.asarray(schedulers[s].schedule(rngs[s]))
+                          for s in range(self.S)]
+                H_r = max(len(s) for s in scheds)
+                scheds = [np.asarray(
+                              schedulers[i].topup_to(s, H_r, rngs[i])
+                              if hasattr(schedulers[i], "topup_to")
+                              else _topup(list(s), self.N, H_r, rngs[i]))
+                          if len(s) < H_r else s
+                          for i, s in enumerate(scheds)]
+                if H is None:
+                    H = H_r
+                elif H_r != H:
+                    raise ValueError(
+                        f"fused sweeps need a round-constant cohort size "
+                        f"(got H={H} then H={H_r}); use the per-round host "
+                        "path for schedulers whose worst-case cohort "
+                        "varies across rounds")
+                rounds.append(np.stack(scheds + [scheds[0]] * self._n_dead))
+            sched_rs = jnp.asarray(np.stack(rounds))     # (R, S_pad, H)
+
+        base = jax.random.PRNGKey(assign_seed)
+        lane_seeds = jnp.asarray(
+            list(seeds) + [seeds[0]] * self._n_dead, jnp.uint32)
+        assign_keys_b = jax.vmap(
+            lambda s: jax.random.fold_in(base, s))(lane_seeds)
+        done0 = np.zeros(self.S_pad, bool)
+        done0[self.S:] = True
+        done_b = jnp.asarray(done0)
+        params_b = self.params0
+        statics = dict(M=self.M, L=sp.L, Q=sp.Q, alloc_steps=self.alloc_steps,
+                       train_only=train_only, agg_kernel=self.agg_kernel,
+                       lane_chunk=self.lane_chunk, assign=assign,
+                       hfel_cfg=hfel_cfg, target_acc=target_acc,
+                       traced_sched=traced_sched)
+        if self.mesh is not None:
+            fn = functools.partial(sweep_scan_sharded, mesh=self.mesh)
+        else:
+            fn = sweep_scan
+
+        def dispatch(params_b, done_b, sched_state_b, assign_keys_b,
+                     sched_rs, n_r):
+            return fn(self.apply_fn, sp, self.sp, params_b, self.u_b,
+                      self.D_b, self.p_b, self.g_b, self.g_cloud_b,
+                      self.B_m_b, self.X_b, self.y_b, self.mask_b, sizes_b,
+                      self.dev_pos_b, self.edge_pos_b, self.Xt_b, self.yt_b,
+                      sched_rs, sched_state_b, assign_keys_b, done_b,
+                      drl_params if assign == "drl" else None, self.lr,
+                      n_rounds=n_r, **statics)
+
+        if oracle:
+            # per-round host loop over the SAME traced step: the fused
+            # path's dispatch-per-round parity baseline.
+            accs, Ts, Es = [], [], []
+            n_dispatches = 0
+            for r in range(n_rounds):
+                xs_r = None if sched_rs is None else sched_rs[r:r + 1]
+                carry, (acc_r, T_r, E_r) = dispatch(
+                    params_b, done_b, sched_state_b, assign_keys_b, xs_r, 1)
+                params_b, done_b, sched_state_b, assign_keys_b = carry
+                n_dispatches += 1
+                accs.append(np.asarray(acc_r)[0, :self.S])
+                Ts.append(np.asarray(T_r)[0, :self.S])
+                Es.append(np.asarray(E_r)[0, :self.S])
+                if target_acc is not None and np.asarray(done_b).all():
+                    break
+            acc_a = np.stack(accs, axis=1)               # (S, R_run)
+            T_a = np.stack(Ts, axis=1)
+            E_a = np.stack(Es, axis=1)
+        else:
+            _, (acc_rs, T_rs, E_rs) = dispatch(
+                params_b, done_b, sched_state_b, assign_keys_b, sched_rs,
+                n_rounds)
+            n_dispatches = 1
+            acc_a = np.asarray(acc_rs)[:, :self.S].T     # (S, R)
+            T_a = np.asarray(T_rs)[:, :self.S].T
+            E_a = np.asarray(E_rs)[:, :self.S].T
+            if target_acc is not None:
+                # trim trailing all-done rounds so the fused result is
+                # row-for-row comparable with the early-breaking host loop
+                # (done lanes' extra rows are frozen-acc / zero-cost).
+                reached_by = np.maximum.accumulate(
+                    acc_a >= target_acc, axis=1)
+                all_done = reached_by.all(axis=0)
+                if all_done.any():
+                    R_eff = int(all_done.argmax()) + 1
+                    acc_a = acc_a[:, :R_eff]
+                    T_a = T_a[:, :R_eff]
+                    E_a = E_a[:, :R_eff]
+
+        R = acc_a.shape[1]
+        if target_acc is not None:
+            reached = acc_a >= target_acc
+            iters = np.where(reached.any(axis=1),
+                             reached.argmax(axis=1) + 1, R)
+        else:
+            iters = np.full(self.S, R)
+        msg_bits = (sp.Q * H + self.M) * sp.model_bits
+        return {"acc": acc_a, "T_i": T_a, "E_i": E_a,
+                "obj": E_a + sp.lam * T_a, "iters": iters,
+                "msg_bits_per_round": float(msg_bits), "H": H,
+                "n_dispatches": n_dispatches}
 
     def _eval(self, params_b, batch: int = 512) -> np.ndarray:
         n = self.Xt_b.shape[1]

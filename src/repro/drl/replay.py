@@ -1,40 +1,64 @@
-"""Episode-granular replay buffer Ω — preallocated array-backed ring.
+"""Episode-granular replay buffer Ω — device-resident array-backed ring.
 
 Tuples (s_t, a_t, r_t, s_{t+1}) of one episode share the same feature
 sequence, so the buffer stores per-episode (features, actions, rewards)
 and samples minibatches of O tuples as (episode, slot) pairs — the BiLSTM
 encodings are then computed once per sampled episode, not per tuple.
 
-Storage is three preallocated numpy arrays (``(capacity, H, F)`` features,
-``(capacity, H)`` actions/rewards) allocated on the first push, written as
-a ring: ``push_batch`` inserts a whole wave of E episodes in one strided
-write (wraparound handled by index arithmetic, not a Python loop), and
-``sample``/``sample_updates`` draw minibatches with vectorised
-(episode, slot) indexing — no per-episode host loops anywhere, which is
-what lets the batched trainer feed its jitted ``lax.scan`` update wave
-straight from buffer gathers.
+Storage is three preallocated jax arrays (``(capacity, H, F)`` features,
+``(capacity, H)`` actions/rewards) allocated on the first push and kept
+ON DEVICE for the buffer's whole life: ``push_batch`` inserts a wave of E
+episodes with one jitted scatter (``.at[slots].set``) and
+``sample``/``sample_updates`` build minibatches with one jitted gather,
+so the trainer's update wave consumes replay slices without the features
+ever round-tripping through host memory. Only the ring *counters* and
+the sampling rng live on the host: ``sample_updates`` draws its
+(episode, slot) indices from the caller's ``np.random.Generator`` with
+exactly the same three vectorised calls as the original host-side ring —
+rng-stream-compatible by construction — and ships the index arrays into
+the gather.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+@jax.jit
+def _ring_write(feats_buf, actions_buf, rewards_buf, slots, feats, actions,
+                rewards):
+    """Scatter one E-episode wave into the ring slots (donated-in-place
+    by XLA when the caller drops its old references)."""
+    return (feats_buf.at[slots].set(feats),
+            actions_buf.at[slots].set(actions),
+            rewards_buf.at[slots].set(rewards))
+
+
+@jax.jit
+def _gather_updates(feats_buf, actions_buf, rewards_buf, eps, rows, slots):
+    """Gather U stacked minibatches from the resident buffers: episode
+    stacks (U, n_ep, H, F) plus per-tuple actions/rewards (U, n)."""
+    return (feats_buf[eps], actions_buf[rows, slots],
+            rewards_buf[rows, slots])
 
 
 class EpisodeReplay:
     def __init__(self, capacity_episodes: int = 2000):
         self.capacity = capacity_episodes
-        self._feats: np.ndarray | None = None     # (cap, H, F)
-        self._actions: np.ndarray | None = None   # (cap, H)
-        self._rewards: np.ndarray | None = None   # (cap, H)
+        self._feats: jax.Array | None = None      # (cap, H, F) device
+        self._actions: jax.Array | None = None    # (cap, H) device
+        self._rewards: jax.Array | None = None    # (cap, H) device
         self._n = 0        # episodes currently held (<= capacity)
         self._pos = 0      # next ring write slot
 
     def _ensure(self, H: int, F: int) -> None:
         if self._feats is None:
-            self._feats = np.zeros((self.capacity, H, F), np.float32)
-            self._actions = np.zeros((self.capacity, H), np.int64)
-            self._rewards = np.zeros((self.capacity, H), np.float32)
+            self._feats = jnp.zeros((self.capacity, H, F), jnp.float32)
+            self._actions = jnp.zeros((self.capacity, H), jnp.int32)
+            self._rewards = jnp.zeros((self.capacity, H), jnp.float32)
         elif self._feats.shape[1:] != (H, F):
             raise ValueError(
                 f"episode shape {(H, F)} != buffer {self._feats.shape[1:]}")
@@ -43,33 +67,35 @@ class EpisodeReplay:
     def H(self) -> int:
         return 0 if self._feats is None else self._feats.shape[1]
 
-    def push(self, feats: np.ndarray, actions: np.ndarray,
-             rewards: np.ndarray) -> None:
+    def push(self, feats, actions, rewards) -> None:
         """Insert one episode: feats (H, F), actions/rewards (H,)."""
         self.push_batch(np.asarray(feats)[None], np.asarray(actions)[None],
                         np.asarray(rewards)[None])
 
-    def push_batch(self, feats: np.ndarray, actions: np.ndarray,
-                   rewards: np.ndarray) -> None:
-        """Insert a wave of E episodes in one ring write.
+    def push_batch(self, feats, actions, rewards) -> None:
+        """Insert a wave of E episodes in one jitted ring write.
 
-        feats (E, H, F), actions/rewards (E, H). If E exceeds the
+        feats (E, H, F), actions/rewards (E, H) — numpy or device
+        arrays; a batched trainer handing over device-resident
+        ``_act_wave`` outputs incurs no host copy. If E exceeds the
         capacity only the most recent ``capacity`` episodes land (ring
         semantics of pushing them one at a time).
         """
-        feats = np.asarray(feats, np.float32)
+        feats = jnp.asarray(feats, jnp.float32)
         E, H, F = feats.shape
         self._ensure(H, F)
+        actions = jnp.asarray(actions, jnp.int32)
+        rewards = jnp.asarray(rewards, jnp.float32)
         if E > self.capacity:       # only the tail survives a full lap
             feats = feats[-self.capacity:]
-            actions = np.asarray(actions)[-self.capacity:]
-            rewards = np.asarray(rewards)[-self.capacity:]
+            actions = actions[-self.capacity:]
+            rewards = rewards[-self.capacity:]
             self._pos = (self._pos + E) % self.capacity
             E = self.capacity
-        slots = (self._pos + np.arange(E)) % self.capacity
-        self._feats[slots] = feats
-        self._actions[slots] = np.asarray(actions)
-        self._rewards[slots] = np.asarray(rewards)
+        slots = jnp.asarray((self._pos + np.arange(E)) % self.capacity)
+        self._feats, self._actions, self._rewards = _ring_write(
+            self._feats, self._actions, self._rewards, slots, feats,
+            actions, rewards)
         self._pos = (self._pos + E) % self.capacity
         self._n = min(self._n + E, self.capacity)
 
@@ -83,8 +109,8 @@ class EpisodeReplay:
 
     def sample(self, rng: np.random.Generator, n_tuples: int,
                max_episodes: int = 8
-               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
-                          np.ndarray]:
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                          jax.Array]:
         """One minibatch of ~n_tuples (episode, slot) pairs.
 
         Returns ``(feats, ep_idx, slots, actions, rewards)``: feats
@@ -98,17 +124,18 @@ class EpisodeReplay:
 
     def sample_updates(self, rng: np.random.Generator, n_updates: int,
                        n_tuples: int, max_episodes: int = 8
-                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                  np.ndarray, np.ndarray]:
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array]:
         """U independent minibatches, stacked for a scanned update wave.
 
         Returns ``(feats, ep_idx, slots, actions, rewards)`` with a
         leading (U,) axis on every array — feats (U, n_ep, H, F), the
-        rest (U, n) — ready to be consumed one slice per ``lax.scan``
-        step by the batched trainer. All U draws happen in three
-        vectorised rng calls (episode choice via argsorted uniforms —
-        without-replacement per update — plus one slot and one episode
-        index draw), not U x n_ep host calls.
+        rest (U, n) — as device arrays ready to be consumed one slice
+        per ``lax.scan`` step by the batched trainer with no host
+        round-trip. All U draws happen in three vectorised host rng
+        calls (episode choice via argsorted uniforms — without-
+        replacement per update — plus one slot and one episode index
+        draw); the resulting indices drive ONE jitted buffer gather.
         """
         if self._n == 0:
             raise ValueError("cannot sample from an empty replay buffer")
@@ -121,8 +148,9 @@ class EpisodeReplay:
         slots = rng.integers(0, H, (U, n_ep * per))
         ep_idx = np.repeat(np.arange(n_ep)[None], U, axis=0)
         ep_idx = np.repeat(ep_idx, per, axis=1)               # (U, n_ep*per)
-        feats = self._feats[eps]                              # (U, n_ep, H, F)
         rows = np.take_along_axis(eps, ep_idx, axis=1)        # buffer slots
-        actions = self._actions[rows, slots]
-        rewards = self._rewards[rows, slots]
-        return feats, ep_idx, slots, actions, rewards
+        feats, actions, rewards = _gather_updates(
+            self._feats, self._actions, self._rewards, jnp.asarray(eps),
+            jnp.asarray(rows), jnp.asarray(slots))
+        return (feats, jnp.asarray(ep_idx), jnp.asarray(slots), actions,
+                rewards)

@@ -83,6 +83,14 @@ def pad_lanes(n_lanes: int, n_devices: int) -> int:
     return -(-n_lanes // n_devices) * n_devices
 
 
+def round_lane_spec() -> P:
+    """Partition spec for round-major lane-stacked arrays — the fused
+    sweep scan's (R, S, ...) schedule tensor inputs and its (R, S)
+    per-round cost/accuracy outputs: the scan (round) axis is carried
+    in-program on every device, only the lane axis shards."""
+    return P(None, "lane")
+
+
 # ------------------------------------------------------------ parameters
 
 def _param_rule(path: str, ndim: int, cfg: ModelConfig) -> P:
