@@ -1,18 +1,38 @@
-"""Serve a small model with batched requests through the production
-serve_step (KV/SSM cache decode) — smoke-scale variants of two assigned
-architectures, one attention-based and one attention-free.
+"""Serving demos for both service CLIs.
 
-    PYTHONPATH=src python examples/serve_demo.py
+    PYTHONPATH=src python examples/serve_demo.py [--smoke]
+
+Full mode runs (1) the streaming async-HFL service
+(``repro.launch.serve``) under the bursty traffic preset and (2) the
+batched LM decode server (``repro.launch.serve_lm``) on smoke-scale
+variants of two architectures, one attention-based and one
+attention-free. ``--smoke`` is the bounded CI guard: just the streaming
+HFL service on a tiny world (the examples-smoke job runs it on every
+push — the point is that the public entry point still executes).
 """
+import argparse
 import subprocess
 import sys
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded CI mode: streaming HFL serve only")
+    args = ap.parse_args()
+
+    print("=== streaming async HFL service (smoke world) ===", flush=True)
+    serve_cmd = [sys.executable, "-m", "repro.launch.serve", "--smoke"]
+    if not args.smoke:
+        serve_cmd += ["--traffic", "bursty", "--buffer-size", "2"]
+    subprocess.run(serve_cmd, check=True)
+    if args.smoke:
+        return
+
     for arch in ("mistral-nemo-12b", "mamba2-2.7b"):
         print(f"\n=== serving {arch} (smoke config) ===", flush=True)
         subprocess.run(
-            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+            [sys.executable, "-m", "repro.launch.serve_lm", "--arch", arch,
              "--smoke", "--batch", "4", "--prompt-len", "16",
              "--gen", "32"],
             check=True)

@@ -1,0 +1,449 @@
+"""Event-driven asynchronous HFL engine — arrivals, dropouts, stragglers.
+
+Every engine up to PR 7 is synchronous-round: the whole scheduled cohort
+trains in lockstep and the round "takes" ``max`` of the member latencies.
+Real IoT fleets are intermittent — devices join mid-round, drop out with
+work in flight, and stragglers inflate the critical path. This module
+runs one HFL global iteration as a *discrete-event simulation* on a
+virtual clock:
+
+* Scheduling, assignment and the convex resource allocation (27) are
+  identical to the fused round engine — ``_alloc_and_price`` reuses the
+  exact ``allocate_batch``/``select_device_allocation`` pattern of
+  ``framework.round_step_core`` and prices each device's task with the
+  per-device eq. (4)-(8) time/energy instead of the per-round reduction.
+* Each dispatched device runs its L local GD steps (Algorithm 1 inner
+  loop) and *returns the update at a trace-determined virtual time*:
+  ``(t_cmp + t_com) * latency_scale`` (straggler inflation, optional
+  log-normal jitter), driven by an :class:`~repro.core.cost_model.
+  AvailabilityTrace` of arrival/dropout flips.
+* Edge servers aggregate from FedBuff-style staleness-weighted buffers:
+  a delivered update that trained against edge version ``v`` is merged
+  at version ``V`` with weight ``D_n / (1 + (V - v))**a`` (eq. (2)
+  generalised); the data mass of cohort members with nothing in the
+  buffer anchors on the current edge model. After Q buffer flushes the
+  edge uploads to the cloud; the cloud aggregates with the eq.-(3)
+  cohort-data-size weights.
+* Device state (dispatched / delivered / aborted) rides the same
+  masked-lane machinery as the PR-4/5 done-masks: one fixed-shape
+  ``(H, ...)`` cohort pytree, updated under boolean masks so every jit
+  re-use hits the same compiled program.
+
+Parity: with the degenerate trace (``AvailabilityTrace.always_on``,
+unit latency scale, no jitter, wait-for-all buffers) the event loop
+reproduces the synchronous ``round_step`` — same b/f allocations and
+per-task costs bitwise, totals to float-accumulation-order tolerance,
+same model params to ulp — pinned in ``tests/test_async_engine.py``
+and documented as the oracle recipe in ``docs/async.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import resource as ra
+from repro.core.hfl import evaluate_in_batches, pad_device_data
+from repro.core.local_train import cohort_local_sgd
+from repro.data.partition import FederatedData
+from repro.models import cnn
+from repro.utils import tree_bytes
+
+
+# ------------------------------------------------------ jitted helpers
+
+@functools.partial(jax.jit, static_argnames=("sp", "M", "alloc_steps"))
+def _alloc_and_price(sp, u, D, p, g, g_cloud, B_m, assign, *, M: int,
+                     alloc_steps: int):
+    """Cohort allocation + per-task pricing, one dispatch.
+
+    The same all-edges ``allocate_batch`` / ``select_device_allocation``
+    pattern as ``framework.round_step_core``, but returning the
+    *per-device* task time/energy ``tc``/``ec`` (H,) so the event loop
+    can spend them task by task, plus the per-edge cloud-hop costs.
+    """
+    H = assign.shape[0]
+    edge_mask = assign[None, :] == jnp.arange(M)[:, None]       # (M, H)
+    res = ra.allocate_batch(
+        sp,
+        jnp.broadcast_to(u, (M, H)), jnp.broadcast_to(D, (M, H)),
+        jnp.broadcast_to(p, (M, H)), g.T, B_m, edge_mask,
+        steps=alloc_steps)
+    b, f = ra.select_device_allocation(res, assign)             # (H,) each
+    g_sel = g[jnp.arange(H), assign]
+    tc = cm.t_cmp(sp, u, D, f) + cm.t_com(sp, b, g_sel, p)
+    ec = cm.e_cmp(sp, u, D, f) + cm.e_com(sp, b, g_sel, p)
+    T_cl, E_cl = cm.cloud_cost(sp, g_cloud)                     # (M,) each
+    return b, f, tc, ec, T_cl, E_cl
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn", "L"))
+def _train_dispatched(apply_fn, cohort_params, edge_params, assign,
+                      dispatch_mask, X, y, mask, lr, *, L: int):
+    """Pull edge models and run L local GD steps on the dispatched lanes.
+
+    Fixed-shape masked update (PR-4/5 done-mask style): every lane runs
+    through ``cohort_local_sgd``, but only lanes where ``dispatch_mask``
+    is set start from their edge's current model and keep the trained
+    result — so one compiled program serves every dispatch pattern.
+    """
+    def bmask(leaf):
+        return dispatch_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    pulled = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
+                          edge_params)
+    src = jax.tree.map(lambda c, q: jnp.where(bmask(c), q, c),
+                       cohort_params, pulled)
+    trained = cohort_local_sgd(apply_fn, src, X, y, mask, L, lr)
+    return jax.tree.map(lambda c, t: jnp.where(bmask(c), t, c),
+                        cohort_params, trained)
+
+
+@jax.jit
+def _flush_edge(edge_params, cohort_params, m, deliver_mask, member_mask,
+                sizes, staleness, a):
+    """Staleness-weighted buffer flush for edge ``m`` (eq. (2) general).
+
+    Delivered members contribute with weight ``D_n / (1+staleness_n)**a``;
+    the data mass of cohort members with nothing in the buffer anchors on
+    the current edge model, so a flush with a partial buffer moves the
+    edge model proportionally to the fresh data it actually received.
+    With all members delivered at staleness 0 this reduces bitwise to the
+    synchronous eq.-(2) weights (the parity-oracle path). An edge whose
+    weight mass is zero keeps its model (the ``has_dev`` fixup).
+    """
+    w_dev = sizes.astype(jnp.float32)
+    decay = (1.0 + staleness) ** a
+    w_del = jnp.where(deliver_mask, w_dev / decay, 0.0)
+    w_anchor = jnp.sum(jnp.where(member_mask & ~deliver_mask, w_dev, 0.0))
+    tot = jnp.sum(w_del) + w_anchor
+    denom = jnp.maximum(tot, 1.0)
+    wn = w_del / denom
+    wa = w_anchor / denom
+
+    def agg(e, c):
+        flat = c.reshape(c.shape[0], -1)
+        new = wn @ flat + wa * e[m].reshape(-1)
+        new = jnp.where(tot > 0, new, e[m].reshape(-1))
+        return e.at[m].set(new.reshape(e.shape[1:]).astype(e.dtype))
+
+    return jax.tree.map(agg, edge_params, cohort_params)
+
+
+@functools.partial(jax.jit, static_argnames=("M",))
+def _cloud_agg(edge_params, assign, sizes, *, M: int):
+    """Eq. (3): cloud aggregation with cohort-data-size weights —
+    identical op order to ``hfl_global_iteration_core``'s cloud path."""
+    onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)
+    w_dev = sizes.astype(jnp.float32)
+    edge_tot = onehot.T @ w_dev
+    w = jnp.where(edge_tot > 0, edge_tot, 0.0)
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+    def agg(e):
+        flat = e.reshape(M, -1)
+        return (w @ flat).reshape(e.shape[1:]).astype(e.dtype)
+
+    return jax.tree.map(agg, edge_params)
+
+
+# ----------------------------------------------------------- the engine
+
+@dataclasses.dataclass
+class AsyncConfig:
+    """Event-loop knobs. The defaults are the sync-parity setting:
+    wait-for-all buffers, no jitter (pair with ``always_on`` traces)."""
+    H: int = 20                     # scheduled cohort size
+    scheduler: str = "fedavg"       # fedavg | ikc | vkc
+    K: int = 10                     # clusters (ikc/vkc)
+    staleness_exp: float = 0.5      # a in D_n/(1+staleness)^a
+    buffer_size: Optional[int] = None   # edge flush threshold; None =
+                                        # wait for every in-flight member
+    lr: float = 0.01
+    alloc_steps: int = 100
+    seed: int = 0
+    jitter_sigma: float = 0.0       # per-task log-normal latency noise
+    max_events_per_round: int = 100_000   # liveness guard
+
+
+class AsyncHFLEngine:
+    """Virtual-clock asynchronous HFL over an availability trace.
+
+    ``step_round()`` runs ONE cloud round as a discrete-event loop:
+    dispatch the scheduled cohort, deliver updates at trace-determined
+    times, flush staleness-weighted edge buffers Q times per edge, then
+    cloud-aggregate and advance the virtual clock by the round makespan.
+    The model/scheduler setup mirrors ``HFLFramework`` (same key
+    derivation for the CNN init, same ``model_bits`` patching) so sync
+    and async runs start from identical states.
+    """
+
+    def __init__(self, sp: cm.SystemParams, pop: cm.Population,
+                 fed: FederatedData, cfg: AsyncConfig,
+                 trace: Optional[cm.AvailabilityTrace] = None,
+                 scheduler=None, assigner=None):
+        self.pop, self.cfg, self.fed = pop, cfg, fed
+        key = jax.random.PRNGKey(cfg.seed)
+        k_model, _, _ = jax.random.split(key, 3)
+        hw = fed.X_test.shape[1:3]
+        self.model_params = cnn.cnn_init(k_model, hw, fed.X_test.shape[3],
+                                         fed.n_classes)
+        self.apply_fn = cnn.cnn_apply
+        self.sp = dataclasses.replace(
+            sp, model_bits=float(tree_bytes(self.model_params) * 8))
+        self.X, self.y, self.mask = pad_device_data(fed)
+
+        if scheduler is None:
+            from repro.core.sweep import build_scheduler
+            scheduler = build_scheduler(cfg.scheduler, fed, self.sp, cfg.H,
+                                        K=cfg.K, lr=cfg.lr, seed=cfg.seed)
+        self.scheduler = scheduler
+        if assigner is None:
+            from repro.core.assignment import GeoAssigner
+            assigner = GeoAssigner(self.sp)
+        self.assigner = assigner
+
+        self.trace = trace or cm.AvailabilityTrace.always_on(pop.n_devices)
+        assert self.trace.n_devices == pop.n_devices, \
+            "availability trace / population size mismatch"
+        self.rng = np.random.default_rng(cfg.seed)
+        self.t = 0.0                    # virtual clock [s]
+        self.round = 0
+        self.history: List[Dict] = []
+        self.last_sched: Optional[np.ndarray] = None
+        self.last_assign: Optional[np.ndarray] = None
+        self.last_alloc = None          # (b, f, tc, ec) of the last round
+
+    # ------------------------------------------------------------ round
+
+    def step_round(self, collect_eval: bool = True) -> Dict:
+        sp, pop, cfg = self.sp, self.pop, self.cfg
+        M, Q = pop.n_edges, sp.Q
+        t0 = self.t
+
+        sched = np.asarray(self.scheduler.schedule(self.rng))
+        assign_np, _ = self.assigner.assign(pop, sched, self.rng)
+        assign_np = np.asarray(assign_np)
+        self.last_sched, self.last_assign = sched, assign_np
+        H = len(sched)
+        assign_j = jnp.asarray(assign_np, jnp.int32)
+        sizes = pop.D[sched]
+
+        b, f, tc, ec, T_cl, E_cl = _alloc_and_price(
+            sp, pop.u[sched], pop.D[sched], pop.p[sched], pop.g[sched],
+            pop.g_cloud, pop.B_m, assign_j, M=M,
+            alloc_steps=cfg.alloc_steps)
+        self.last_alloc = (b, f, tc, ec)
+        ec_h = np.asarray(ec, np.float64)
+        T_cl_h = np.asarray(T_cl, np.float64)
+        lat = (np.asarray(tc, np.float64)
+               * self.trace.latency_scale[sched])
+
+        Xc, yc, mc = self.X[sched], self.y[sched], self.mask[sched]
+        edge_params = jax.tree.map(
+            lambda g_: jnp.broadcast_to(g_[None], (M,) + g_.shape),
+            self.model_params)
+        cohort_params = jax.tree.map(
+            lambda g_: jnp.broadcast_to(g_[None], (H,) + g_.shape),
+            self.model_params)
+
+        # --- per-slot event-loop state (cohort-indexed)
+        up = self.trace.up_at(t0)[sched].copy()      # (H,) availability
+        delivered = np.zeros(H, bool)                # in an edge buffer
+        task_id = np.full(H, -1, np.int64)           # -1 = idle/aborted
+        start_ver = np.zeros(H, np.int64)            # edge ver at dispatch
+        edge_ver = np.zeros(M, np.int64)
+        flushes = np.zeros(M, np.int64)
+        edge_finish = np.full(M, t0, np.float64)
+        edge_energy = np.zeros(M, np.float64)        # aggregated-task J
+        members = [np.flatnonzero(assign_np == m) for m in range(M)]
+        for m in range(M):                           # empty edges: done,
+            if len(members[m]) == 0:                 # cloud hop only
+                flushes[m] = Q
+        stats = {"n_agg": 0, "n_stale": 0, "max_stale": 0,
+                 "n_aborted": 0, "wasted_j": 0.0}
+
+        heap: list = []
+        seq = 0
+        next_task = 0
+        tog_rows = [self.trace.toggles[d] for d in sched]
+        tog_ptr = [int(np.searchsorted(row, t0, side="right"))
+                   for row in tog_rows]
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        for s in range(H):
+            i = tog_ptr[s]
+            if i < len(tog_rows[s]) and np.isfinite(tog_rows[s][i]):
+                push(float(tog_rows[s][i]), "toggle", s)
+
+        def dispatch(slots, t):
+            nonlocal cohort_params, next_task
+            slots = [s for s in slots
+                     if up[s] and not delivered[s] and task_id[s] < 0
+                     and flushes[assign_np[s]] < Q]
+            if not slots:
+                return
+            dmask = np.zeros(H, bool)
+            dmask[slots] = True
+            cohort_params = _train_dispatched(
+                self.apply_fn, cohort_params, edge_params, assign_j,
+                jnp.asarray(dmask), Xc, yc, mc, cfg.lr, L=sp.L)
+            for s in slots:
+                start_ver[s] = edge_ver[assign_np[s]]
+                task_id[s] = next_task
+                next_task += 1
+                mult = 1.0
+                if cfg.jitter_sigma > 0:
+                    mult = float(np.exp(
+                        self.rng.normal(0.0, cfg.jitter_sigma)))
+                push(t + lat[s] * mult, "done", (s, task_id[s]))
+
+        def do_flush(m, t, redispatch=True):
+            nonlocal edge_params
+            mem = members[m]
+            del_mask = np.zeros(H, bool)
+            del_mask[mem] = delivered[mem]
+            mem_mask = np.zeros(H, bool)
+            mem_mask[mem] = True
+            stal = np.where(del_mask, edge_ver[m] - start_ver, 0)
+            edge_params = _flush_edge(
+                edge_params, cohort_params, jnp.int32(m),
+                jnp.asarray(del_mask), jnp.asarray(mem_mask),
+                sizes, jnp.asarray(stal, jnp.float32),
+                jnp.float32(cfg.staleness_exp))
+            d_slots = np.flatnonzero(del_mask)
+            edge_energy[m] += float(ec_h[d_slots].sum())
+            stats["n_agg"] += len(d_slots)
+            if len(d_slots):
+                s_max = int(stal[d_slots].max())
+                stats["max_stale"] = max(stats["max_stale"], s_max)
+                stats["n_stale"] += int((stal[d_slots] > 0).sum())
+            delivered[d_slots] = False
+            edge_ver[m] += 1
+            flushes[m] += 1
+            if flushes[m] >= Q:
+                edge_finish[m] = t
+            elif redispatch:
+                dispatch(list(d_slots), t)
+
+        def should_flush(m):
+            if flushes[m] >= Q:
+                return False
+            mem = members[m]
+            n_del = int(delivered[mem].sum())
+            in_flight = int((task_id[mem] >= 0).sum())
+            if n_del > 0 and in_flight == 0:
+                return True          # buffer drained — nothing to wait on
+            return (cfg.buffer_size is not None
+                    and n_del >= min(cfg.buffer_size, len(mem)))
+
+        # --- run the round
+        dispatch(list(np.flatnonzero(up)), t0)
+        events = 0
+        while not np.all(flushes >= Q):
+            if not heap or events >= cfg.max_events_per_round:
+                break                # liveness guard: forced drain below
+            t, _, kind, payload = heapq.heappop(heap)
+            events += 1
+            self.t = max(self.t, t)
+            if kind == "toggle":
+                s = payload
+                tog_ptr[s] += 1
+                i = tog_ptr[s]
+                if i < len(tog_rows[s]) and np.isfinite(tog_rows[s][i]):
+                    push(float(tog_rows[s][i]), "toggle", s)
+                up[s] = not up[s]
+                m = int(assign_np[s])
+                if up[s]:
+                    dispatch([s], t)         # mid-round arrival
+                else:
+                    if task_id[s] >= 0:      # dropout aborts in-flight
+                        task_id[s] = -1
+                        stats["wasted_j"] += float(ec_h[s])
+                        stats["n_aborted"] += 1
+                    if should_flush(m):
+                        do_flush(m, t)
+            else:                            # task completion
+                s, tid = payload
+                if tid != task_id[s]:
+                    continue                 # aborted / superseded task
+                task_id[s] = -1
+                m = int(assign_np[s])
+                if flushes[m] >= Q:          # edge already uploaded
+                    stats["wasted_j"] += float(ec_h[s])
+                    stats["n_aborted"] += 1
+                    continue
+                delivered[s] = True
+                if should_flush(m):
+                    do_flush(m, t)
+
+        forced = int(np.maximum(Q - flushes, 0).sum())
+        for m in range(M):                   # forced drain (liveness)
+            while flushes[m] < Q:
+                do_flush(m, self.t, redispatch=False)
+        heap.clear()
+
+        # --- round totals + eq.-(3) cloud aggregation
+        T_m = (edge_finish - t0) + T_cl_h
+        T_round = float(T_m.max()) if M else 0.0
+        E_round = float(edge_energy.sum() + np.asarray(E_cl).sum())
+        self.model_params = _cloud_agg(edge_params, assign_j, sizes, M=M)
+        self.t = t0 + T_round
+        self.round += 1
+
+        acc = None
+        if collect_eval:
+            acc = evaluate_in_batches(self.apply_fn, self.model_params,
+                                      self.fed.X_test, self.fed.y_test)
+        rec = {"round": self.round, "t": self.t, "acc": acc,
+               "T_i": T_round, "E_i": E_round,
+               "obj_i": E_round + sp.lam * T_round,
+               "H": H, "n_updates": stats["n_agg"],
+               "n_stale": stats["n_stale"],
+               "max_staleness": stats["max_stale"],
+               "n_aborted": stats["n_aborted"],
+               "wasted_j": stats["wasted_j"],
+               "forced_flushes": forced,
+               "msg_bits": (stats["n_agg"] + M) * self.sp.model_bits}
+        self.history.append(rec)
+        return rec
+
+    # ------------------------------------------------------ conveniences
+
+    def run(self, n_rounds: int, target_acc: Optional[float] = None,
+            eval_every: int = 1, verbose: bool = False) -> Dict:
+        for r in range(1, n_rounds + 1):
+            rec = self.step_round(
+                collect_eval=eval_every > 0 and r % eval_every == 0)
+            if verbose:
+                acc = "-" if rec["acc"] is None else f"{rec['acc']:.3f}"
+                print(f"  [async] round {rec['round']:3d} t={rec['t']:9.1f}s"
+                      f" acc={acc} updates={rec['n_updates']}"
+                      f" stale={rec['n_stale']} wasted={rec['wasted_j']:.1f}J")
+            if (target_acc is not None and rec["acc"] is not None
+                    and rec["acc"] >= target_acc):
+                break
+        return self.summary()
+
+    def summary(self) -> Dict:
+        evals = [r for r in self.history if r["acc"] is not None]
+        T = sum(r["T_i"] for r in self.history)
+        E = sum(r["E_i"] for r in self.history)
+        return {"rounds": len(self.history), "t_virtual": self.t,
+                "final_acc": evals[-1]["acc"] if evals else None,
+                "T": T, "E": E, "objective": E + self.sp.lam * T,
+                "n_updates": sum(r["n_updates"] for r in self.history),
+                "n_stale": sum(r["n_stale"] for r in self.history),
+                "n_aborted": sum(r["n_aborted"] for r in self.history),
+                "wasted_j": sum(r["wasted_j"] for r in self.history),
+                "history": self.history}

@@ -293,3 +293,103 @@ def round_cost(sp: SystemParams, pop: Population, sched_idx, assign,
 def objective(sp: SystemParams, T_i, E_i):
     """Per-round system cost E_i + λ T_i (problem (17))."""
     return E_i + sp.lam * T_i
+
+
+# ------------------------------------------------- availability traces
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityParams:
+    """Intermittent-connectivity knobs for the async engine.
+
+    Devices follow an alternating-renewal (two-state Markov) process:
+    exponentially distributed online sessions of mean ``mean_up_s``
+    alternate with offline gaps of mean ``mean_down_s``. A
+    ``straggler_frac`` fraction of devices has every task latency
+    multiplied by ``straggler_scale``; ``jitter_sigma`` adds per-task
+    log-normal latency noise (consumed by the engine's host RNG, not the
+    trace). The defaults are the degenerate always-on / no-straggler
+    setting under which the event-driven engine reproduces the
+    synchronous ``round_step`` exactly (the parity oracle recipe in
+    ``docs/async.md``).
+    """
+    p_offline0: float = 0.0                # fraction initially offline
+    mean_up_s: float = float("inf")        # mean online session [s]
+    mean_down_s: float = 60.0              # mean offline gap [s]
+    straggler_frac: float = 0.0            # fraction of slow devices
+    straggler_scale: float = 5.0           # their latency multiplier
+    jitter_sigma: float = 0.0              # per-task log-normal sigma
+
+
+def sample_straggler_scales(key, ap: AvailabilityParams, n: int):
+    """(n,) per-device latency multipliers — jit/vmap compatible."""
+    slow = jax.random.bernoulli(key, ap.straggler_frac, (n,))
+    return jnp.where(slow, ap.straggler_scale, 1.0)
+
+
+def sample_toggle_times(key, ap: AvailabilityParams, n: int,
+                        max_toggles: int = 64):
+    """Alternating-renewal availability flips — jit/vmap compatible.
+
+    Returns ``(init_up, toggles)``: ``init_up`` (n,) bool initial state,
+    ``toggles`` (n, max_toggles) ascending flip times. Holding time j is
+    Exp(mean_up) when the device is up during period j, Exp(mean_down)
+    when down; an infinite mean (the always-on default) pushes every
+    subsequent flip to +inf, so padding and "never flips" coincide.
+    """
+    k_init, k_dur = jax.random.split(key)
+    init_up = jax.random.uniform(k_init, (n,)) >= ap.p_offline0
+    j = jnp.arange(max_toggles)[None, :]
+    up_during = init_up[:, None] ^ (j % 2 == 1)     # state in period j
+    mean = jnp.where(up_during, ap.mean_up_s, ap.mean_down_s)
+    dur = jax.random.exponential(k_dur, (n, max_toggles)) * mean
+    return init_up, jnp.cumsum(dur, axis=1)
+
+
+@dataclasses.dataclass
+class AvailabilityTrace:
+    """Host-side per-device availability trace (async engine input).
+
+    ``toggles[n]`` holds the ascending virtual times at which device n
+    flips between online and offline, +inf padded; ``init_up[n]`` is its
+    state at t=0 and ``latency_scale[n]`` multiplies every task latency
+    (straggler inflation). Build with :func:`sample_availability`, a
+    :class:`repro.core.traffic.TrafficGenerator`, or :meth:`always_on`
+    (the degenerate parity trace).
+    """
+    init_up: np.ndarray        # (N,) bool state at t=0
+    toggles: np.ndarray        # (N, T) ascending flip times [s], inf-pad
+    latency_scale: np.ndarray  # (N,) per-device latency multiplier
+
+    @property
+    def n_devices(self) -> int:
+        return self.init_up.shape[0]
+
+    @classmethod
+    def always_on(cls, n: int) -> "AvailabilityTrace":
+        """Every device up forever at unit speed (sync parity trace)."""
+        return cls(init_up=np.ones(n, bool),
+                   toggles=np.full((n, 1), np.inf),
+                   latency_scale=np.ones(n))
+
+    def up_at(self, t: float) -> np.ndarray:
+        """(N,) bool availability at virtual time ``t``."""
+        flips = (self.toggles <= t).sum(axis=1)
+        return self.init_up ^ (flips % 2 == 1)
+
+    def toggles_after(self, n: int, t: float) -> np.ndarray:
+        """Device n's finite flip times strictly after ``t``, ascending."""
+        row = self.toggles[n]
+        return row[(row > t) & np.isfinite(row)]
+
+
+def sample_availability(ap: AvailabilityParams, n: int, seed: int = 0,
+                        max_toggles: int = 64) -> AvailabilityTrace:
+    """Sample a host ``AvailabilityTrace`` from the jit-compatible
+    samplers — seeded alongside the population so async sweeps replay."""
+    k_t, k_s = jax.random.split(jax.random.PRNGKey(seed))
+    init_up, toggles = sample_toggle_times(k_t, ap, n, max_toggles)
+    scale = sample_straggler_scales(k_s, ap, n)
+    return AvailabilityTrace(
+        init_up=np.asarray(init_up),
+        toggles=np.asarray(toggles, np.float64),
+        latency_scale=np.asarray(scale, np.float64))

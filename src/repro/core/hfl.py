@@ -128,6 +128,14 @@ def evaluate_accuracy(apply_fn: Callable, params, X_test, y_test):
 
 
 def evaluate_in_batches(apply_fn, params, X_test, y_test, batch: int = 512):
+    """Test accuracy in device-sized batches, host-averaged.
+
+    Chunks the test set so evaluation never materialises one
+    (n_test, ...) activation tensor; each chunk goes through the jitted
+    ``evaluate_accuracy`` (one compiled program per chunk shape — the
+    final ragged chunk compiles separately) and the chunk means are
+    recombined with exact sample-count weights.
+    """
     accs, ns = [], []
     for i in range(0, len(y_test), batch):
         a = evaluate_accuracy(apply_fn, params,

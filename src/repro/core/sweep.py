@@ -5,10 +5,18 @@ The paper's headline experiments (Figs. 3-7, Table II) are grids of
 multi-round HFL simulation. Re-running ``HFLFramework`` per cell pays the
 Python/dispatch overhead S times per round; ``SweepRunner`` instead
 stacks S independent worlds (population + federated data) along a
-leading lane axis and vmaps the fused ``round_step`` over it, so every
-round of every lane is ONE jitted dispatch. Scheduling ratios change the
-cohort shape H, so each ratio is its own vmapped program (lanes within a
-ratio share one).
+leading lane axis and vmaps the traceable ``round_step_core`` over it
+(``_sweep_round_lanes``), so every round of every lane is ONE jitted
+dispatch. Scheduling ratios change the cohort shape H, so each ratio is
+its own vmapped program (lanes within a ratio share one).
+
+Three further dispatch layouts compose on top of the per-round vmap
+(details in ``docs/engine.md``): ``shard=True`` block-shards the lane
+axis over a 1-D device mesh via ``shard_map`` (``sweep_round_sharded``),
+``lane_chunk=k`` executes lanes in sequential vmapped chunks (CPU
+cache-blocking), and ``run(fused=True)`` folds the entire R-round sweep
+— scheduling, assignment, eval and done-masks traced — into one
+``lax.scan`` dispatch (``sweep_scan`` / ``sweep_scan_sharded``).
 
 Semantics per lane match ``HFLFramework`` with ``engine="fused"``:
 Algorithm-1 training weighted by the cost-model dataset sizes pop.D,

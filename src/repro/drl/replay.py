@@ -46,6 +46,14 @@ def _gather_updates(feats_buf, actions_buf, rewards_buf, eps, rows, slots):
 
 
 class EpisodeReplay:
+    """Device-resident episode ring Ω (see module docstring).
+
+    Episode arrays live on device from first push; host state is just
+    the ring counters (``_n``, ``_pos``) and the caller-owned sampling
+    rng. Episode shape (H, F) is fixed at first push — a mismatched
+    push raises rather than silently re-padding.
+    """
+
     def __init__(self, capacity_episodes: int = 2000):
         self.capacity = capacity_episodes
         self._feats: jax.Array | None = None      # (cap, H, F) device

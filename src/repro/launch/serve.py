@@ -1,88 +1,162 @@
-"""Batched decode serving CLI.
+"""Long-running streaming HFL service — the async engine under traffic.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \
-        --smoke --batch 8 --prompt-len 32 --gen 64
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+    PYTHONPATH=src python -m repro.launch.serve --rounds 50 \
+        --traffic diurnal --buffer-size 4 \
+        --ckpt-dir /tmp/hfl_ckpt --ckpt-every 10
 
-Prefills a random prompt batch, then decodes `gen` tokens per sequence
-through the jitted serve_step (KV/SSM cache), reporting tokens/s.
+Drives :class:`repro.core.async_engine.AsyncHFLEngine` round by round on
+a virtual clock: every round streams one JSON line to stdout (round id,
+virtual time, accuracy, staleness/waste accounting), the model is
+evaluated every ``--eval-every`` rounds and checkpointed every
+``--ckpt-every`` rounds via ``repro.checkpoint.ckpt``
+(``<dir>/step_<round>/``). Traffic presets:
+
+* ``always-on``  — the degenerate sync-parity fleet (no churn),
+* ``stationary`` — alternating-renewal dropouts + 20% 4x stragglers,
+* ``diurnal``    — non-homogeneous Poisson joins, sinusoidal load,
+* ``bursty``     — diurnal plus periodic burst windows.
+
+The old LM decode serving CLI lives on as ``repro.launch.serve_lm``.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.checkpoint import ckpt
+from repro.core import cost_model as cm
+from repro.core.async_engine import AsyncConfig, AsyncHFLEngine
+from repro.core.traffic import TrafficGenerator, TrafficParams
+from repro.data import make_dataset, partition_noniid
 
-from repro.configs.registry import get_config, get_smoke_config
-from repro.launch import steps as S
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.models import transformer as T
+
+def build_world(n_devices: int, n_edges: int, n_train: int, n_test: int,
+                seed: int, L: Optional[int] = None,
+                Q: Optional[int] = None):
+    """Population + synthetic non-IID federated dataset (quickstart
+    recipe) sized for a streaming run."""
+    sp = cm.SystemParams(n_devices=n_devices, n_edges=n_edges,
+                         d_range=(50, 90))
+    if L is not None:
+        sp = dataclasses.replace(sp, L=L)
+    if Q is not None:
+        sp = dataclasses.replace(sp, Q=Q)
+    pop = cm.sample_population(sp, seed=seed)
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=n_train,
+                                n_test=n_test, seed=seed)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=n_devices,
+                           size_range=(20, 40), seed=seed)
+    return sp, pop, fed
+
+
+def build_trace(traffic: str, n_devices: int, seed: int,
+                horizon_s: float = 2e4) -> cm.AvailabilityTrace:
+    """Availability trace for a named traffic preset."""
+    if traffic == "always-on":
+        return cm.AvailabilityTrace.always_on(n_devices)
+    if traffic == "stationary":
+        ap = cm.AvailabilityParams(p_offline0=0.1, mean_up_s=900.0,
+                                   mean_down_s=120.0, straggler_frac=0.2,
+                                   straggler_scale=4.0)
+        return cm.sample_availability(ap, n_devices, seed=seed)
+    if traffic in ("diurnal", "bursty"):
+        tp = TrafficParams(
+            join_rate=n_devices / 600.0, mean_session_s=600.0,
+            diurnal_amp=0.8, diurnal_period_s=3600.0, p_online0=0.5,
+            burst_mult=5.0 if traffic == "bursty" else 1.0,
+            burst_every_s=3600.0 if traffic == "bursty" else float("inf"),
+            burst_len_s=300.0 if traffic == "bursty" else 0.0)
+        return TrafficGenerator(tp, n_devices, seed=seed).make_trace(
+            horizon_s)
+    raise ValueError(f"unknown traffic preset {traffic!r}")
+
+
+def run_serve(n_devices: int = 40, n_edges: int = 5, H: int = 20,
+              rounds: int = 10, scheduler: str = "fedavg",
+              traffic: str = "always-on",
+              buffer_size: Optional[int] = None,
+              staleness_exp: float = 0.5, eval_every: int = 1,
+              ckpt_every: int = 0, ckpt_dir: Optional[str] = None,
+              out_json: Optional[str] = None, seed: int = 0,
+              n_train: int = 2000, n_test: int = 500,
+              alloc_steps: int = 100, L: Optional[int] = None,
+              Q: Optional[int] = None, log=print) -> Dict:
+    """Stream ``rounds`` async HFL rounds; returns the engine summary.
+
+    Importable/testable core of the CLI: ``log`` receives one JSON line
+    per round (checkpoint/eval cadence is asserted by
+    ``tests/test_launch_cli.py`` through this entry point).
+    """
+    sp, pop, fed = build_world(n_devices, n_edges, n_train, n_test, seed,
+                               L=L, Q=Q)
+    trace = build_trace(traffic, n_devices, seed)
+    cfg = AsyncConfig(H=H, scheduler=scheduler, buffer_size=buffer_size,
+                      staleness_exp=staleness_exp, seed=seed,
+                      alloc_steps=alloc_steps)
+    engine = AsyncHFLEngine(sp, pop, fed, cfg, trace=trace)
+
+    n_ckpts = 0
+    for r in range(1, rounds + 1):
+        rec = engine.step_round(
+            collect_eval=eval_every > 0 and r % eval_every == 0)
+        log(json.dumps(rec, default=float))
+        if ckpt_every > 0 and ckpt_dir and r % ckpt_every == 0:
+            ckpt.save_pytree(engine.model_params, ckpt_dir, r)
+            n_ckpts += 1
+
+    summary = engine.summary()
+    summary["n_checkpoints"] = n_ckpts
+    summary["traffic"] = traffic
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as fh:
+            json.dump(summary, fh, indent=1, default=float)
+    return summary
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=64)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--production-mesh", action="store_true")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny world / 3 rounds (CI smoke)")
+    ap.add_argument("--devices", type=int, default=40)
+    ap.add_argument("--edges", type=int, default=5)
+    ap.add_argument("--H", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--scheduler", default="fedavg",
+                    choices=("fedavg", "ikc", "vkc"))
+    ap.add_argument("--traffic", default="stationary",
+                    choices=("always-on", "stationary", "diurnal",
+                             "bursty"))
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="edge flush threshold (default: wait-for-all)")
+    ap.add_argument("--staleness-exp", type=float, default=0.5)
+    ap.add_argument("--eval-every", type=int, default=1)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None, help="summary JSON path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_debug_mesh())
-    key = jax.random.PRNGKey(args.seed)
-    max_len = args.prompt_len + args.gen
-
-    with mesh:
-        params = T.init(key, cfg)
-        serve = jax.jit(S.make_serve_step(cfg, mesh))
-        cache = T.init_cache(cfg, args.batch, max_len)
-        tok_shape = ((args.batch, args.prompt_len) if cfg.n_codebooks == 1
-                     else (args.batch, args.prompt_len, cfg.n_codebooks))
-        prompt = jax.random.randint(key, tok_shape, 0, cfg.vocab_size)
-
-        # prefill through the decode path (teacher-forced)
-        t0 = time.time()
-        logits = None
-        for t in range(args.prompt_len):
-            logits, cache = serve(params, cache, prompt[:, t:t + 1],
-                                  jnp.int32(t))
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
-
-        def sample(logits, k):
-            lg = logits[:, 0]
-            if cfg.n_codebooks > 1:
-                lg = lg.reshape(args.batch, cfg.n_codebooks, cfg.vocab_size)
-            if args.temperature <= 0:
-                nxt = jnp.argmax(lg, axis=-1)
-            else:
-                nxt = jax.random.categorical(k, lg / args.temperature, axis=-1)
-            return nxt.astype(jnp.int32)
-
-        out_tokens = []
-        t0 = time.time()
-        cur = sample(logits, key)
-        for t in range(args.prompt_len, max_len):
-            cur_in = cur[:, None] if cfg.n_codebooks == 1 else cur[:, None, :]
-            logits, cache = serve(params, cache, cur_in, jnp.int32(t))
-            key, sk = jax.random.split(key)
-            cur = sample(logits, sk)
-            out_tokens.append(np.asarray(cur))
-        jax.block_until_ready(logits)
-        t_decode = time.time() - t0
-
-    tps = args.batch * args.gen / t_decode
-    print(f"arch={cfg.name} batch={args.batch} prefill={t_prefill:.2f}s "
-          f"decode={t_decode:.2f}s ({tps:,.1f} tok/s)")
-    arr = np.stack(out_tokens, axis=1)
-    print("sample tokens[0,:16]:", arr[0, :16].reshape(16, -1)[:, 0].tolist())
+    kw = dict(n_devices=args.devices, n_edges=args.edges, H=args.H,
+              rounds=args.rounds, scheduler=args.scheduler,
+              traffic=args.traffic, buffer_size=args.buffer_size,
+              staleness_exp=args.staleness_exp,
+              eval_every=args.eval_every, ckpt_every=args.ckpt_every,
+              ckpt_dir=args.ckpt_dir, out_json=args.out, seed=args.seed)
+    if args.smoke:
+        kw.update(n_devices=10, n_edges=3, H=6, rounds=3, n_train=300,
+                  n_test=120, alloc_steps=40, L=2, Q=3)
+    summary = run_serve(**kw)
+    acc = summary["final_acc"]
+    print(f"served {summary['rounds']} rounds to t={summary['t_virtual']:.1f}s "
+          f"virtual: acc={'-' if acc is None else f'{acc:.3f}'} "
+          f"updates={summary['n_updates']} stale={summary['n_stale']} "
+          f"wasted={summary['wasted_j']:.1f}J "
+          f"ckpts={summary['n_checkpoints']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,119 @@
+"""Unit tests for the ``benchmarks.run --check`` regression guard.
+
+Pure-python (no JAX): pins the ``_perf_fields`` suffix contract and the
+per-field noise floor of ``check_regressions`` — in particular the
+ISSUE-8 bugfix where a sub-floor baseline used to be *skipped* (so a
+4ms -> 400ms regression passed silently) and is now gated against
+``max(baseline, floor_ms) * factor``. Contract: ``benchmarks/README.md``.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.run import _perf_fields, check_regressions  # noqa: E402
+
+
+def _write(dirpath: Path, name: str, obj: dict) -> None:
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / name).write_text(json.dumps(obj))
+
+
+def _dirs(tmp_path: Path, base: dict, fresh: dict,
+          name: str = "BENCH_x_smoke.json"):
+    _write(tmp_path / "baselines", name, base)
+    _write(tmp_path / "results", name, fresh)
+    return str(tmp_path / "results"), str(tmp_path / "baselines")
+
+
+def test_perf_fields_suffixes_and_nesting():
+    fields = _perf_fields({
+        "round_ms": 3.0,
+        "search_s": 0.25,
+        "train_eps_per_s": 40.0,
+        "final_acc": 0.9,            # ignored: no perf suffix
+        "rounds": 4,                 # ignored
+        "cases": [{"wall_per_round_ms": 7.0, "n_stale": 2}],
+        "nested": {"probe_ms": 1.0},
+    })
+    assert fields["round_ms"] == (3.0, "time")
+    assert fields["search_s"] == (250.0, "time")      # normalised to ms
+    assert fields["train_eps_per_s"] == (40.0, "rate")
+    assert fields["cases.0.wall_per_round_ms"] == (7.0, "time")
+    assert fields["nested.probe_ms"] == (1.0, "time")
+    assert "final_acc" not in fields
+    assert "cases.0.n_stale" not in fields
+
+
+def test_check_passes_within_factor(tmp_path):
+    res, base = _dirs(tmp_path, {"round_ms": 10.0}, {"round_ms": 15.0})
+    assert check_regressions(res, base, factor=2.0) == []
+
+
+def test_check_fails_on_slowdown(tmp_path):
+    res, base = _dirs(tmp_path, {"round_ms": 10.0}, {"round_ms": 25.0})
+    fails = check_regressions(res, base, factor=2.0)
+    assert len(fails) == 1 and "round_ms" in fails[0]
+
+
+def test_subfloor_baseline_tolerates_jitter_but_gates_blowups(tmp_path):
+    """The ISSUE-8 bugfix: sub-floor baselines are gated against
+    floor_ms*factor, not skipped. 4ms -> 9ms passes (under the 10ms
+    gate); 4ms -> 400ms fails."""
+    res, base = _dirs(tmp_path, {"round_ms": 4.0}, {"round_ms": 9.0})
+    assert check_regressions(res, base, factor=2.0, floor_ms=5.0) == []
+    res, base = _dirs(tmp_path, {"round_ms": 4.0}, {"round_ms": 400.0})
+    fails = check_regressions(res, base, factor=2.0, floor_ms=5.0)
+    assert len(fails) == 1
+    assert "gate 10.0ms" in fails[0]
+
+
+def test_rate_fields_gate_on_drop(tmp_path):
+    res, base = _dirs(tmp_path, {"eps_per_s": 40.0}, {"eps_per_s": 25.0})
+    assert check_regressions(res, base, factor=2.0) == []
+    res, base = _dirs(tmp_path, {"eps_per_s": 40.0}, {"eps_per_s": 10.0})
+    assert len(check_regressions(res, base, factor=2.0)) == 1
+
+
+def test_missing_fresh_file_is_a_failure(tmp_path):
+    _write(tmp_path / "baselines", "BENCH_x_smoke.json", {"round_ms": 1.0})
+    (tmp_path / "results").mkdir()
+    fails = check_regressions(str(tmp_path / "results"),
+                              str(tmp_path / "baselines"), factor=2.0)
+    # the lone baseline has no fresh twin -> the missing-file failure
+    # plus the zero-fields-compared (vacuous guard) failure
+    assert any("missing" in f for f in fails)
+    assert any("vacuous" in f for f in fails)
+
+
+def test_zero_comparable_fields_is_a_failure(tmp_path):
+    res, base = _dirs(tmp_path, {"final_acc": 0.9}, {"final_acc": 0.9})
+    fails = check_regressions(res, base, factor=2.0)
+    assert len(fails) == 1 and "vacuous" in fails[0]
+
+
+def test_factor_env_override(tmp_path, monkeypatch):
+    monkeypatch.setenv("BENCH_CHECK_FACTOR", "10.0")
+    res, base = _dirs(tmp_path, {"round_ms": 10.0}, {"round_ms": 90.0})
+    assert check_regressions(res, base) == []          # 9x < 10x
+    monkeypatch.setenv("BENCH_CHECK_FACTOR", "2.0")
+    assert len(check_regressions(res, base)) == 1
+
+
+def test_async_engine_baseline_is_committed_and_guarded():
+    """ISSUE 8: the async bench participates in the regression guard —
+    its committed smoke baseline must expose timing fields."""
+    base = (Path(__file__).resolve().parents[1] / "benchmarks" /
+            "baselines" / "BENCH_async_engine_smoke.json")
+    assert base.exists()
+    fields = _perf_fields(json.loads(base.read_text()))
+    times = [k for k, (_, kind) in fields.items() if kind == "time"]
+    assert any("wall_per_round_ms" in k for k in times)
+    assert any("sync_round_r50_ms" in k for k in times)
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Docs CI guard: link integrity + executable fenced python snippets.
+
+    PYTHONPATH=src python tools/check_docs.py [--no-exec] [FILES...]
+
+Over ``README.md``, ``docs/*.md`` and ``benchmarks/README.md`` (or an
+explicit file list):
+
+* **Links** — every relative markdown link / image target must exist on
+  disk (anchors are stripped; ``http(s):``/``mailto:`` externals and
+  the README's relative CI-badge route are skipped — CI must stay
+  offline-deterministic).
+* **Snippets** — every fenced code block tagged exactly ``python`` is
+  executed with the repo on ``PYTHONPATH`` (cwd = repo root, a temp dir
+  for scratch); a snippet that raises fails the job. Blocks tagged
+  ``python no-run`` are skipped — use that for illustrative fragments
+  that aren't self-contained — and everything else (``bash``, ``text``,
+  untagged) is ignored.
+
+Exit code 0 iff all links resolve and all snippets run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); ignores in-snippet indexing like
+# x[0](...) by requiring the target not to start with a quote/paren
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(.*?)\s*$")
+
+
+def default_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md"),
+             os.path.join(REPO, "benchmarks", "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def iter_fences(text: str):
+    """Yield (info_string, body, start_line) for each fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m and lines[i].startswith("```") and m.group(1) != "":
+            info, start = m.group(1).strip(), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield info, "\n".join(body), start
+        i += 1
+
+
+def check_links(path: str) -> list[str]:
+    errs = []
+    text = open(path).read()
+    # strip fenced blocks so code like `a[0](b)` never parses as a link
+    stripped = []
+    in_fence = False
+    for ln in text.splitlines():
+        if ln.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            stripped.append(ln)
+    for target in _LINK_RE.findall("\n".join(stripped)):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        if "/actions/" in target:      # the README's relative badge route
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errs.append(f"{os.path.relpath(path, REPO)}: dead link "
+                        f"-> {target}")
+    return errs
+
+
+def run_snippets(path: str) -> list[str]:
+    errs = []
+    text = open(path).read()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for info, body, line in iter_fences(text):
+        if info != "python":
+            continue
+        name = f"{os.path.relpath(path, REPO)}:{line}"
+        with tempfile.TemporaryDirectory() as tmp:
+            snip = os.path.join(tmp, "snippet.py")
+            with open(snip, "w") as fh:
+                fh.write(body + "\n")
+            print(f"[check_docs] exec {name}", flush=True)
+            proc = subprocess.run([sys.executable, snip], cwd=REPO,
+                                  env=env, capture_output=True, text=True,
+                                  timeout=600)
+        if proc.returncode != 0:
+            errs.append(f"{name}: snippet failed "
+                        f"(exit {proc.returncode})\n{proc.stdout}"
+                        f"{proc.stderr}")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README.md, docs/*.md, "
+                         "benchmarks/README.md)")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="links only; skip snippet execution")
+    args = ap.parse_args()
+
+    files = [os.path.abspath(f) for f in args.files] or default_files()
+    errs = []
+    n_snips = 0
+    for path in files:
+        errs += check_links(path)
+        if not args.no_exec:
+            n_snips += sum(1 for info, _, _ in
+                           iter_fences(open(path).read())
+                           if info == "python")
+            errs += run_snippets(path)
+    for e in errs:
+        print(f"[check_docs] FAIL {e}", file=sys.stderr, flush=True)
+    print(f"[check_docs] {len(files)} files, {n_snips} executable "
+          f"snippets, {len(errs)} errors", flush=True)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
