@@ -1,0 +1,236 @@
+"""Micro-benchmark: uplink compression — accuracy vs bytes on the wire.
+
+Sweeps the update codecs (``none`` / ``bf16_delta`` / ``int8`` /
+``topk``) at the paper's 50% / 30% scheduling ratios through the fused
+round engine (``HFLFramework`` with the plain ``fedavg`` scheduler, so
+the cohort is exactly ``round(ratio * N)`` — the cluster-based
+schedulers round the cohort up to a multiple of K, which at bench scale
+collapses both ratios onto the same cohort). For each (codec, ratio)
+cell it records:
+
+* ``acc_vs_bytes`` — [cumulative_uplink_bytes, accuracy] per round: the
+  headline accuracy-vs-communication trade-off curve;
+* ``byte_reduction_at_target_x`` — the communication-efficiency claim:
+  uplink bytes the dense run spends over its horizon divided by the
+  bytes the codec needs to first reach within 1pp of the dense best
+  accuracy. Each codec is allowed extra rounds past the dense horizon,
+  capped at ``rounds * payload_ratio / gate`` so a codec can never
+  "pass" while having spent more than ``1/gate`` of the dense bytes;
+* the cost-model view — per-round ``msg_bits`` and the eq. (13)/(14)
+  ``T_i``/``E_i`` sums, which shrink with the payload because the
+  convex allocation prices the codec's actual bits-per-message;
+* host overhead — ``wall_per_round_ms`` plus a direct
+  ``encode_decode_ms`` timing of the jitted codec math on the cohort's
+  (H, ...) delta tree (the per-round encode/decode cost, isolated from
+  training).
+
+Writes ``BENCH_comm_compress.json`` so future PRs track the trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_comm_compress [--smoke]
+
+``--smoke`` runs tiny shapes and asserts the PR's acceptance bar: int8
+and topk reach within 1pp of the uncompressed accuracy on >= ~4x fewer
+uplink bytes (3.9x for int8 — the per-leaf f32 scale overhead makes its
+exact payload ratio 32p/(8p+32L) < 4), with T_i/E_i reduced to match.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import compression as comp
+from repro.core import cost_model as cm
+from repro.core.framework import FrameworkConfig, HFLFramework
+from repro.data import make_dataset, partition_noniid
+
+N_DEVICES = 20
+N_EDGES = 4
+ROUNDS = 12
+ALLOC_STEPS = 100
+TOPK_FRAC = 0.1
+ACC_TOL_PP = 1.0
+# reduction gates: payload ratio the codec must beat — also caps the
+# extra rounds it may take to reach the dense target accuracy
+MIN_RATIO = {"none": 1.0, "bf16_delta": 1.9, "int8": 3.9, "topk": 4.0}
+
+
+def _world(n_devices, n_edges, n_train, n_test, L, Q, seed=0):
+    sp = cm.SystemParams(n_devices=n_devices, n_edges=n_edges,
+                         d_range=(30, 60), L=L, Q=Q)
+    pop = cm.sample_population(sp, seed=seed)
+    X, y, Xt, yt = make_dataset("fmnist_syn", n_train=n_train,
+                                n_test=n_test, seed=seed)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=n_devices,
+                           size_range=(15, 30), seed=seed)
+    return sp, pop, fed
+
+
+def _encode_decode_ms(codec_cfg, params, H, repeat=5):
+    """Jitted codec round-trip on an (H, ...) cohort delta tree — the
+    isolated per-message encode/decode cost (identity codec: ~0, it
+    passes through untouched)."""
+    delta = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None] * 1e-3, (H,) + p.shape)
+        .astype(jnp.float32), params)
+    resid = jax.tree.map(jnp.zeros_like, delta)
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def roundtrip(d, r):
+        return comp.encode_decode(codec_cfg, key, d, r)
+
+    out = jax.block_until_ready(roundtrip(delta, resid))    # compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = jax.block_until_ready(roundtrip(delta, resid))
+    del out
+    return (time.perf_counter() - t0) / repeat * 1e3
+
+
+def _run_case(codec, ratio, sp, pop, fed, rounds, alloc_steps,
+              topk_frac=TOPK_FRAC, seed=0):
+    H = max(2, int(round(ratio * pop.n_devices)))
+    ccfg = comp.CompressionConfig(codec=codec, topk_frac=topk_frac,
+                                  seed=seed)
+    cfg = FrameworkConfig(H=H, engine="fused", scheduler="fedavg",
+                          seed=seed, alloc_steps=alloc_steps,
+                          compression=ccfg)
+    fw = HFLFramework(sp, pop, fed, cfg)
+    raw_bits = comp.message_bits(comp.CompressionConfig(), fw.model_params)
+    payload_ratio = raw_bits / fw.uplink_bits
+    # extra rounds to chase the dense target accuracy, capped so that
+    # reaching it still implies >= MIN_RATIO[codec] fewer bytes
+    total_rounds = max(rounds, int(rounds * payload_ratio
+                                   / MIN_RATIO[codec]))
+    accs, cum_bytes, T, E = [], [], 0.0, 0.0
+    acc_vs_bytes = []
+    t0 = time.perf_counter()
+    for i in range(total_rounds):
+        rec = fw.run_round(i)
+        accs.append(rec["acc"])
+        cum_bytes.append((cum_bytes[-1] if cum_bytes else 0.0)
+                         + rec["msg_bits"] / 8)
+        acc_vs_bytes.append([cum_bytes[-1], rec["acc"]])
+        if i < rounds:
+            T += rec["T_i"]
+            E += rec["E_i"]
+    wall = (time.perf_counter() - t0) / total_rounds
+    return {
+        "codec": codec, "ratio": ratio, "H": H, "rounds": rounds,
+        "total_rounds": total_rounds,
+        "topk_frac": topk_frac if codec == "topk" else None,
+        "uplink_bits_per_msg": float(fw.uplink_bits),
+        "payload_ratio_x": float(payload_ratio),
+        "msg_bits_per_round": fw.history[-1]["msg_bits"],
+        "acc_vs_bytes": acc_vs_bytes,
+        # matched-round stats over the dense horizon
+        "best_acc": max(accs[:rounds]), "final_acc": accs[rounds - 1],
+        "cum_uplink_bytes": cum_bytes[rounds - 1],
+        "T": T, "E": E,
+        "wall_per_round_ms": wall * 1e3,
+        "encode_decode_ms": _encode_decode_ms(ccfg, fw.model_params, H),
+    }
+
+
+def _bytes_to_target(case, target_acc):
+    """First point on the codec's curve reaching ``target_acc``."""
+    for b, a in case["acc_vs_bytes"]:
+        if a >= target_acc:
+            return b
+    return None
+
+
+def run(out_json: str = "BENCH_comm_compress.json",
+        n_devices: int = N_DEVICES, n_edges: int = N_EDGES,
+        rounds: int = ROUNDS, n_train: int = 1200, n_test: int = 400,
+        L: int = 3, Q: int = 3, alloc_steps: int = ALLOC_STEPS):
+    sp, pop, fed = _world(n_devices, n_edges, n_train, n_test, L, Q)
+    result = {"N": n_devices, "M": n_edges, "rounds": rounds,
+              "L": L, "Q": Q, "topk_frac": TOPK_FRAC,
+              "acc_tol_pp": ACC_TOL_PP, "cases": []}
+    for ratio in (0.5, 0.3):
+        base = None
+        for codec in comp.CODECS:
+            r = _run_case(codec, ratio, sp, pop, fed, rounds, alloc_steps)
+            if codec == "none":
+                base = r
+            target = base["best_acc"] - ACC_TOL_PP / 100
+            bt = _bytes_to_target(r, target)
+            r["target_acc"] = target
+            r["bytes_to_target"] = bt
+            r["byte_reduction_at_target_x"] = (
+                None if bt is None else base["cum_uplink_bytes"] / bt)
+            r["byte_reduction_x"] = (base["cum_uplink_bytes"]
+                                     / r["cum_uplink_bytes"])
+            r["acc_delta_pp"] = 100 * (r["best_acc"] - base["best_acc"])
+            result["cases"].append(r)
+            bt_x = r["byte_reduction_at_target_x"]
+            emit(f"comm_compress/{codec}_r{int(ratio * 100)}",
+                 r["wall_per_round_ms"] * 1e3,
+                 f"acc={r['best_acc']:.3f};x={r['byte_reduction_x']:.2f};"
+                 f"x_at_target={'-' if bt_x is None else f'{bt_x:.2f}'};"
+                 f"dacc={r['acc_delta_pp']:+.1f}pp;"
+                 f"codec_ms={r['encode_decode_ms']:.1f}")
+
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+    return result
+
+
+def run_smoke(out_json: str = "results/BENCH_comm_compress_smoke.json"):
+    """Tiny-shape CI guard: asserts the PR's acceptance bar on the
+    emitted JSON — int8/topk reach within 1pp of the dense accuracy on
+    >= ~4x fewer uplink bytes, with the cost model priced to match."""
+    result = run(out_json=out_json, n_devices=10, n_edges=3, rounds=10,
+                 n_train=400, n_test=400, L=3, Q=3, alloc_steps=40)
+    with open(out_json) as fh:
+        loaded = json.load(fh)
+    assert len(loaded["cases"]) == 2 * len(comp.CODECS)
+    by_key = {(c["codec"], c["ratio"]): c for c in loaded["cases"]}
+    for ratio in (0.5, 0.3):
+        base = by_key[("none", ratio)]
+        assert base["byte_reduction_x"] == 1.0
+        assert len(base["acc_vs_bytes"]) == base["rounds"]
+        for codec in ("int8", "topk"):
+            c = by_key[(codec, ratio)]
+            # per-round payload actually shrank >= the gate ...
+            assert c["payload_ratio_x"] >= MIN_RATIO[codec], \
+                (codec, ratio, c["payload_ratio_x"])
+            assert c["byte_reduction_x"] >= MIN_RATIO[codec], \
+                (codec, ratio, c["byte_reduction_x"])
+            # ... and the dense accuracy (within 1pp) was reached on
+            # >= gate-times fewer bytes (the total_rounds cap makes
+            # reaching it at all sufficient; assert both anyway)
+            assert c["bytes_to_target"] is not None, (codec, ratio)
+            assert c["byte_reduction_at_target_x"] >= MIN_RATIO[codec], \
+                (codec, ratio, c["byte_reduction_at_target_x"])
+            # the cost model sees the smaller payload
+            assert c["msg_bits_per_round"] < base["msg_bits_per_round"]
+            assert c["E"] < base["E"] and c["T"] < base["T"]
+        # int8 stochastic rounding + EF is near-lossless even at
+        # matched rounds
+        assert by_key[("int8", ratio)]["acc_delta_pp"] >= -ACC_TOL_PP
+    emit("comm_compress/smoke", 0.0, "pass=True")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; assert the acceptance ratios")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

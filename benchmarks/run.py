@@ -158,7 +158,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
                          "engine|hfel|hier_agg|drl_train|sweep_shard|"
-                         "sweep_fused|schedule_scale|async_engine")
+                         "sweep_fused|schedule_scale|async_engine|"
+                         "comm_compress")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     ap.add_argument("--smoke", action="store_true",
@@ -250,6 +251,10 @@ def main() -> None:
         from benchmarks import bench_async_engine
         _perf_bench(bench_async_engine, "async_engine")
 
+    def run_comm_compress():
+        from benchmarks import bench_comm_compress
+        _perf_bench(bench_comm_compress, "comm_compress")
+
     # fig6 reuses fig5's trained D3QN when both are selected, so order
     # matters: fig5 before fig6
     suites = [
@@ -268,11 +273,12 @@ def main() -> None:
         ("sweep_fused", run_sweep_fused),
         ("schedule_scale", run_schedule_scale),
         ("async_engine", run_async_engine),
+        ("comm_compress", run_comm_compress),
     ]
     if args.smoke or args.perf:
         perf_names = ("engine", "hfel", "hier_agg", "drl_train",
                       "sweep_shard", "sweep_fused", "schedule_scale",
-                      "async_engine")
+                      "async_engine", "comm_compress")
         suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core import resource as ra
 from repro.core.hfl import evaluate_in_batches, pad_device_data
@@ -105,6 +106,39 @@ def _train_dispatched(apply_fn, cohort_params, edge_params, assign,
                         cohort_params, trained)
 
 
+@functools.partial(jax.jit, static_argnames=("apply_fn", "L", "codec"))
+def _train_dispatched_compressed(apply_fn, cohort_params, edge_params,
+                                 assign, dispatch_mask, X, y, mask, lr,
+                                 resid, key, *, L: int, codec):
+    """``_train_dispatched`` with the uplink codec applied.
+
+    Dispatched lanes train from their edge model, then ship
+    ``encode(trained - pulled + resid)``; the buffered value is the
+    edge-side reconstruction ``pulled + decode(...)`` (the staleness-
+    weighted flush is linear in the decoded update, so merging the
+    reconstruction is exactly merging the wire-format update).
+    ``resid``: (H, ...) error-feedback rows for the scheduled cohort —
+    updated only on dispatched lanes, like the params.
+    """
+    def bmask(leaf):
+        return dispatch_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    pulled = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
+                          edge_params)
+    src = jax.tree.map(lambda c, q: jnp.where(bmask(c), q, c),
+                       cohort_params, pulled)
+    trained = cohort_local_sgd(apply_fn, src, X, y, mask, L, lr)
+    delta = jax.tree.map(lambda t, q: (t - q).astype(jnp.float32),
+                         trained, pulled)
+    dec, new_resid = comp.encode_decode(codec, key, delta, resid)
+    recon = jax.tree.map(lambda q, d: (q + d).astype(q.dtype), pulled, dec)
+    new_cohort = jax.tree.map(lambda c, t: jnp.where(bmask(c), t, c),
+                              cohort_params, recon)
+    new_resid = jax.tree.map(lambda r, nr: jnp.where(bmask(r), nr, r),
+                             resid, new_resid)
+    return new_cohort, new_resid
+
+
 @jax.jit
 def _flush_edge(edge_params, cohort_params, m, deliver_mask, member_mask,
                 sizes, staleness, a):
@@ -153,6 +187,30 @@ def _cloud_agg(edge_params, assign, sizes, *, M: int):
     return jax.tree.map(agg, edge_params)
 
 
+@functools.partial(jax.jit, static_argnames=("M", "codec"))
+def _cloud_agg_compressed(edge_params, global_params, assign, sizes, resid,
+                          key, *, M: int, codec):
+    """Compressed eq.-(3): each edge ships ``encode(edge - global)``, the
+    cloud aggregates the decoded deltas in delta space (identical weights
+    to ``_cloud_agg`` — exact when the codec is lossless). Returns
+    ``(new_global, new_edge_resid)``."""
+    onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)
+    edge_tot = onehot.T @ sizes.astype(jnp.float32)
+    w = jnp.where(edge_tot > 0, edge_tot, 0.0)
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+    delta = jax.tree.map(
+        lambda e, g_: (e - g_[None]).astype(jnp.float32),
+        edge_params, global_params)
+    dec, new_resid = comp.encode_decode(codec, key, delta, resid)
+
+    def agg(g_, d):
+        flat = d.reshape(M, -1)
+        return (g_.reshape(-1) + w @ flat).reshape(g_.shape).astype(g_.dtype)
+
+    return jax.tree.map(agg, global_params, dec), new_resid
+
+
 # ----------------------------------------------------------- the engine
 
 @dataclasses.dataclass
@@ -170,6 +228,8 @@ class AsyncConfig:
     seed: int = 0
     jitter_sigma: float = 0.0       # per-task log-normal latency noise
     max_events_per_round: int = 100_000   # liveness guard
+    compression: comp.CompressionConfig = dataclasses.field(
+        default_factory=comp.CompressionConfig)
 
 
 class AsyncHFLEngine:
@@ -197,6 +257,18 @@ class AsyncHFLEngine:
         self.apply_fn = cnn.cnn_apply
         self.sp = dataclasses.replace(
             sp, model_bits=float(tree_bytes(self.model_params) * 8))
+        self.codec = cfg.compression
+        self.uplink_bits = comp.message_bits(self.codec, self.model_params)
+        # allocation + pricing see the codec's actual bits-per-message;
+        # codec="none" gives exactly model_bits, so sp_round equals
+        # self.sp (same frozen dataclass -> same jit cache entry ->
+        # bitwise sync parity).
+        self.sp_round = dataclasses.replace(
+            self.sp, model_bits=float(self.uplink_bits))
+        self.dev_resid = comp.init_state(self.codec, self.model_params,
+                                         fed.n_devices)
+        self.edge_resid = comp.init_state(self.codec, self.model_params,
+                                          pop.n_edges)
         self.X, self.y, self.mask = pad_device_data(fed)
 
         if scheduler is None:
@@ -236,14 +308,22 @@ class AsyncHFLEngine:
         sizes = pop.D[sched]
 
         b, f, tc, ec, T_cl, E_cl = _alloc_and_price(
-            sp, pop.u[sched], pop.D[sched], pop.p[sched], pop.g[sched],
-            pop.g_cloud, pop.B_m, assign_j, M=M,
+            self.sp_round, pop.u[sched], pop.D[sched], pop.p[sched],
+            pop.g[sched], pop.g_cloud, pop.B_m, assign_j, M=M,
             alloc_steps=cfg.alloc_steps)
         self.last_alloc = (b, f, tc, ec)
         ec_h = np.asarray(ec, np.float64)
         T_cl_h = np.asarray(T_cl, np.float64)
         lat = (np.asarray(tc, np.float64)
                * self.trace.latency_scale[sched])
+
+        codec_on = self.codec.active
+        cohort_resid, n_disp = None, 0
+        if codec_on:
+            cohort_resid = jax.tree.map(lambda r_: r_[sched],
+                                        self.dev_resid)
+            k_disp, k_cloud = jax.random.split(
+                comp.round_key(self.codec, cfg.seed, self.round))
 
         Xc, yc, mc = self.X[sched], self.y[sched], self.mask[sched]
         edge_params = jax.tree.map(
@@ -287,7 +367,7 @@ class AsyncHFLEngine:
                 push(float(tog_rows[s][i]), "toggle", s)
 
         def dispatch(slots, t):
-            nonlocal cohort_params, next_task
+            nonlocal cohort_params, cohort_resid, n_disp, next_task
             slots = [s for s in slots
                      if up[s] and not delivered[s] and task_id[s] < 0
                      and flushes[assign_np[s]] < Q]
@@ -295,9 +375,17 @@ class AsyncHFLEngine:
                 return
             dmask = np.zeros(H, bool)
             dmask[slots] = True
-            cohort_params = _train_dispatched(
-                self.apply_fn, cohort_params, edge_params, assign_j,
-                jnp.asarray(dmask), Xc, yc, mc, cfg.lr, L=sp.L)
+            if codec_on:
+                cohort_params, cohort_resid = _train_dispatched_compressed(
+                    self.apply_fn, cohort_params, edge_params, assign_j,
+                    jnp.asarray(dmask), Xc, yc, mc, cfg.lr, cohort_resid,
+                    jax.random.fold_in(k_disp, n_disp), L=sp.L,
+                    codec=self.codec)
+                n_disp += 1
+            else:
+                cohort_params = _train_dispatched(
+                    self.apply_fn, cohort_params, edge_params, assign_j,
+                    jnp.asarray(dmask), Xc, yc, mc, cfg.lr, L=sp.L)
             for s in slots:
                 start_ver[s] = edge_ver[assign_np[s]]
                 task_id[s] = next_task
@@ -397,7 +485,16 @@ class AsyncHFLEngine:
         T_m = (edge_finish - t0) + T_cl_h
         T_round = float(T_m.max()) if M else 0.0
         E_round = float(edge_energy.sum() + np.asarray(E_cl).sum())
-        self.model_params = _cloud_agg(edge_params, assign_j, sizes, M=M)
+        if codec_on:
+            self.model_params, self.edge_resid = _cloud_agg_compressed(
+                edge_params, self.model_params, assign_j, sizes,
+                self.edge_resid, k_cloud, M=M, codec=self.codec)
+            self.dev_resid = jax.tree.map(
+                lambda full, r_: full.at[jnp.asarray(sched)].set(r_),
+                self.dev_resid, cohort_resid)
+        else:
+            self.model_params = _cloud_agg(edge_params, assign_j, sizes,
+                                           M=M)
         self.t = t0 + T_round
         self.round += 1
 
@@ -414,7 +511,11 @@ class AsyncHFLEngine:
                "n_aborted": stats["n_aborted"],
                "wasted_j": stats["wasted_j"],
                "forced_flushes": forced,
-               "msg_bits": (stats["n_agg"] + M) * self.sp.model_bits}
+               "msg_bits": cm.round_msg_bits(self.sp, stats["n_agg"], M,
+                                             msg_bits=self.uplink_bits),
+               "uplink_bytes": float(
+                   (stats["n_agg"] + M) * self.uplink_bits / 8),
+               "codec": self.codec.codec}
         self.history.append(rec)
         return rec
 

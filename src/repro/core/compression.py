@@ -1,0 +1,192 @@
+"""Communication compression for uplink model updates — codecs + error
+feedback, charged end-to-end in the cost model.
+
+Every engine up to PR 8 ships full-precision ``model_bits`` payloads on
+every uplink. This module provides a family of jit-compatible *update
+codecs* applied to parameter deltas against the reference model the
+sender pulled (device→edge: the edge model at dispatch; edge→cloud: the
+global model):
+
+* ``none``       — identity; the parity oracle. Engines statically
+                   short-circuit to their exact uncompressed code path,
+                   so ``codec="none"`` reproduces it bitwise.
+* ``bf16_delta`` — casts the delta to bfloat16 (16 bits/param).
+* ``int8``       — stochastic-rounding quantization to int8 with one
+                   per-tensor (per message, per leaf) f32 scale
+                   ``max|x|/127``; unbiased: E[decode(encode(x))] = x.
+* ``topk``       — magnitude top-k sparsification per leaf
+                   (k = max(1, round(topk_frac·n))), sent as
+                   (index, value) pairs.
+
+Each codec carries an **error-feedback residual** per sender (Seide et
+al. 2014 / Karimireddy et al. 2019): the encoder compresses
+``x = delta + residual`` and keeps ``residual' = x - decode(encode(x))``
+for the next round, so the *accumulated* compression error stays bounded
+and compressed training remains unbiased over rounds (property-tested in
+``tests/test_compression.py``).
+
+The compressed per-message size (:func:`message_bits`) is what the cost
+model charges: engines patch ``SystemParams.model_bits`` with it, so
+``t_com``/``e_com``/``cloud_cost`` (eqs. (7)-(8), (11)-(12)) and the
+convex resource allocation all see the codec's actual bits-per-message.
+
+Encoding is row-wise: leaves carry a leading message axis (H devices or
+M edges) and every row is one message. ``encode_rows``/``decode_rows``
+are the single source of codec math; :func:`encode_decode` composes them
+over pytrees, and the kernel aggregation path consumes
+``encode_leaf``'s (q, scale) form directly (``kernels/hier_agg``
+``masked_decode_aggregate`` folds the scales into the in-kernel weight
+panel, so the dense decoded update matrix is never a matmul input).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+CODECS = ("none", "bf16_delta", "int8", "topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Uplink update-codec knobs (hashable — used as a static jit arg).
+
+    ``codec="none"`` is the identity oracle: engines skip the delta
+    transform entirely and trace their uncompressed program.
+    ``error_feedback`` keeps a per-sender residual accumulator across
+    rounds; ``seed`` feeds the stochastic-rounding key stream (derived
+    per (lane, round), never carried — host-loop and fused-scan engines
+    draw identical keys).
+    """
+    codec: str = "none"             # none | bf16_delta | int8 | topk
+    topk_frac: float = 0.05         # fraction of entries kept per leaf
+    error_feedback: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; "
+                             f"valid: {CODECS}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1], "
+                             f"got {self.topk_frac}")
+
+    @property
+    def active(self) -> bool:
+        return self.codec != "none"
+
+
+def _topk_k(cfg: CompressionConfig, n: int) -> int:
+    return min(n, max(1, int(round(cfg.topk_frac * n))))
+
+
+def message_bits(cfg: CompressionConfig, params) -> float:
+    """Bits per uplink message for one model shaped like ``params``.
+
+    ``none`` counts raw parameter bytes; ``int8`` adds one f32 scale per
+    leaf; ``topk`` charges (value + index) per kept entry, indices at
+    ceil(log2(n)) bits.
+    """
+    leaves = jax.tree.leaves(params)
+    if cfg.codec == "none":
+        return float(sum(leaf.size * leaf.dtype.itemsize * 8
+                         for leaf in leaves))
+    if cfg.codec == "bf16_delta":
+        return float(sum(leaf.size * 16 for leaf in leaves))
+    if cfg.codec == "int8":
+        return float(sum(leaf.size * 8 + 32 for leaf in leaves))
+    # topk: (f32 value, index) pairs per leaf
+    bits = 0.0
+    for leaf in leaves:
+        n = leaf.size
+        bits += _topk_k(cfg, n) * (32 + max(1, math.ceil(math.log2(n))))
+    return float(bits)
+
+
+def init_state(cfg: CompressionConfig, params, n_rows: int):
+    """Zero error-feedback residuals: one per sender row, f32, shaped
+    like ``params`` with a leading ``(n_rows,)`` axis. Returns None for
+    the identity codec (no state to carry)."""
+    if not cfg.active:
+        return None
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_rows,) + p.shape, jnp.float32), params)
+
+
+# ------------------------------------------------------- row-wise codecs
+
+def encode_rows(cfg: CompressionConfig, key, x):
+    """Encode (R, p) f32 rows — R messages of one p-element tensor.
+
+    Returns ``(q, scale)``: the wire form. q is (R, p) int8 (``int8``),
+    bf16 (``bf16_delta``) or dense-masked f32 (``topk``, the simulated
+    form of the (index, value) pairs); scale is (R,) f32 per-message
+    decode scales (ones where the codec has none).
+    """
+    R = x.shape[0]
+    ones = jnp.ones((R,), jnp.float32)
+    if cfg.codec == "bf16_delta":
+        return x.astype(jnp.bfloat16), ones
+    if cfg.codec == "int8":
+        absmax = jnp.max(jnp.abs(x), axis=1)
+        scale = jnp.maximum(absmax / 127.0, 1e-30)
+        u = jax.random.uniform(key, x.shape)
+        q = jnp.clip(jnp.floor(x / scale[:, None] + u), -127, 127)
+        return q.astype(jnp.int8), scale
+    if cfg.codec == "topk":
+        k = _topk_k(cfg, x.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)                  # (R, k)
+        keep = jnp.zeros_like(x).at[jnp.arange(R)[:, None], idx].set(1.0)
+        return x * keep, ones
+    raise ValueError(f"encode_rows on codec {cfg.codec!r}")
+
+
+def decode_rows(cfg: CompressionConfig, q, scale):
+    """Decode the wire form back to (R, p) f32 rows."""
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def encode_leaf(cfg: CompressionConfig, key, delta, resid):
+    """Error-feedback encode of one leaf: (R, p) delta + residual.
+
+    Returns ``(q, scale, new_resid)`` — the wire form plus the updated
+    residual ``x - decode(q, scale)`` (pass-through when
+    ``error_feedback=False``).
+    """
+    x = delta + resid if cfg.error_feedback else delta
+    q, scale = encode_rows(cfg, key, x)
+    if cfg.error_feedback:
+        resid = x - decode_rows(cfg, q, scale)
+    return q, scale, resid
+
+
+def encode_decode(cfg: CompressionConfig, key, delta, resid):
+    """Compress-then-decompress a pytree of updates with error feedback.
+
+    ``delta``/``resid``: pytrees whose leaves carry a leading message
+    axis (R, ...). Returns ``(decoded, new_resid)`` with the same
+    structure; the identity codec passes both through untouched.
+    """
+    if not cfg.active:
+        return delta, resid
+    d_leaves, treedef = jax.tree.flatten(delta)
+    r_leaves = jax.tree.leaves(resid)
+    keys = jax.random.split(key, len(d_leaves))
+    dec_leaves, new_r = [], []
+    for d, r, k in zip(d_leaves, r_leaves, keys):
+        R = d.shape[0]
+        q, s, nr = encode_leaf(cfg, k, d.reshape(R, -1).astype(jnp.float32),
+                               r.reshape(R, -1))
+        dec_leaves.append(decode_rows(cfg, q, s).reshape(d.shape))
+        new_r.append(nr.reshape(r.shape))
+    return treedef.unflatten(dec_leaves), treedef.unflatten(new_r)
+
+
+def round_key(cfg: CompressionConfig, lane_seed: int, round_idx):
+    """Deterministic per-(lane, round) codec key — stateless, so the
+    host-loop and fused-scan engines draw identical randomness without
+    threading a key through their carries."""
+    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), lane_seed)
+    return jax.random.fold_in(base, round_idx)

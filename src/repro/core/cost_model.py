@@ -295,6 +295,22 @@ def objective(sp: SystemParams, T_i, E_i):
     return E_i + sp.lam * T_i
 
 
+def round_msg_bits(sp: SystemParams, n_uplink_msgs, n_cloud_msgs,
+                   msg_bits=None) -> float:
+    """Bits on the air in one global iteration (Fig. 7f/7g accounting).
+
+    ``n_uplink_msgs`` device→edge updates (Q·H synchronously, the number
+    of aggregated deliveries asynchronously) plus ``n_cloud_msgs``
+    edge→cloud uploads (M), each ``msg_bits`` bits — ``sp.model_bits``
+    unless a codec's compressed per-message size is passed
+    (:func:`repro.core.compression.message_bits`). The single accounting
+    site shared by ``HFLFramework``, ``SweepRunner`` and
+    ``AsyncHFLEngine`` so compression is counted exactly once.
+    """
+    z = sp.model_bits if msg_bits is None else msg_bits
+    return float((n_uplink_msgs + n_cloud_msgs) * z)
+
+
 # ------------------------------------------------- availability traces
 
 @dataclasses.dataclass(frozen=True)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core import resource as ra
 from repro.core.clustering import adjusted_rand_index
@@ -48,7 +49,8 @@ from repro.utils import tree_bytes
 def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
                     g_cloud, B_m, X, y, mask, sizes, assign, lr, *,
                     M: int, L: int, Q: int, alloc_steps: int,
-                    agg_kernel: bool = False):
+                    agg_kernel: bool = False, codec=None,
+                    codec_state=None, codec_key=None):
     """Traceable fused round: one global iteration minus scheduling.
 
     Inputs are pre-gathered for the scheduled cohort: u/D/p/sizes (H,),
@@ -59,6 +61,14 @@ def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
     the hierarchical aggregation (2)-(3) through the fused masked-weight
     ``kernels/hier_agg`` Pallas kernel (interpret off-TPU) instead of
     masked XLA einsums. Returns (new_params, (T_i, E_i, T_m, E_m, b, f)).
+
+    Compression: with an active ``codec`` (static
+    ``CompressionConfig``), pass the caller's ``sp`` already patched
+    with the codec's per-message bits (``compression.message_bits``) so
+    the allocation and eqs. (7)-(12) price the compressed payload;
+    ``codec_state`` is ``(dev_resid, edge_resid)`` error-feedback trees
+    for the cohort (H, ...) and the edges (M, ...). The return then
+    becomes ``(new_params, (new_dev_resid, new_edge_resid), aux)``.
     """
     H = assign.shape[0]
     edge_mask = assign[None, :] == jnp.arange(M)[:, None]       # (M, H)
@@ -71,6 +81,15 @@ def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
     g_sel = g[jnp.arange(H), assign]
     T_i, E_i, T_m, E_m = cm.round_cost_gathered(
         sp, u, D, p, g_sel, g_cloud, assign, b, f, M)
+    if codec is not None and codec.active:
+        dev_resid, edge_resid = codec_state
+        new_params, dev_resid, edge_resid = hfl_global_iteration_core(
+            apply_fn, params, X, y, mask, sizes, assign, M=M, L=L, Q=Q,
+            lr=lr, agg_kernel=agg_kernel, codec=codec,
+            dev_resid=dev_resid, edge_resid=edge_resid,
+            codec_key=codec_key)
+        return new_params, (dev_resid, edge_resid), (T_i, E_i, T_m, E_m,
+                                                     b, f)
     new_params = hfl_global_iteration_core(
         apply_fn, params, X, y, mask, sizes, assign, M=M, L=L, Q=Q, lr=lr,
         agg_kernel=agg_kernel)
@@ -78,15 +97,17 @@ def round_step_core(apply_fn, sp: cm.SystemParams, params, u, D, p, g,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "agg_kernel"))
+    "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "agg_kernel", "codec"))
 def round_step(apply_fn, sp: cm.SystemParams, params, u, D, p, g, g_cloud,
                B_m, X, y, mask, sizes, assign, lr, *, M: int, L: int,
-               Q: int, alloc_steps: int, agg_kernel: bool = False):
+               Q: int, alloc_steps: int, agg_kernel: bool = False,
+               codec=None, codec_state=None, codec_key=None):
     """Jitted fused round — see ``round_step_core``."""
     return round_step_core(apply_fn, sp, params, u, D, p, g, g_cloud, B_m,
                            X, y, mask, sizes, assign, lr,
                            M=M, L=L, Q=Q, alloc_steps=alloc_steps,
-                           agg_kernel=agg_kernel)
+                           agg_kernel=agg_kernel, codec=codec,
+                           codec_state=codec_state, codec_key=codec_key)
 
 
 @dataclasses.dataclass
@@ -105,6 +126,8 @@ class FrameworkConfig:
     engine: str = "fused"           # fused | sequential (per-edge oracle)
     hfel_search: str = "batched"    # batched | serial (assigner="hfel")
     hfel_candidates: int = 16       # K moves per batched HFEL round
+    compression: comp.CompressionConfig = dataclasses.field(
+        default_factory=comp.CompressionConfig)   # uplink update codec
 
 
 class HFLFramework:
@@ -122,6 +145,26 @@ class HFLFramework:
         self.apply_fn = cnn.cnn_apply
         self.model_bits = tree_bytes(self.model_params) * 8
         self.sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
+
+        # uplink codec: compressed per-message bits price every uplink
+        # (device->edge and edge->cloud ship the same codec), so the
+        # round sp the allocator/cost model see carries them; identity
+        # codec => uplink_bits == model_bits and sp_round == sp (the
+        # same jit cache entry — bitwise parity with the seed path).
+        self.codec = cfg.compression
+        if self.codec.active and cfg.engine == "sequential":
+            raise ValueError("compression requires engine='fused' (the "
+                             "sequential oracle ships raw payloads)")
+        self.uplink_bits = comp.message_bits(self.codec, self.model_params)
+        self.sp_round = dataclasses.replace(
+            self.sp, model_bits=float(self.uplink_bits))
+        self.codec_state = None
+        if self.codec.active:
+            self.codec_state = (
+                comp.init_state(self.codec, self.model_params,
+                                fed.n_devices),
+                comp.init_state(self.codec, self.model_params,
+                                pop.n_edges))
 
         self.X, self.y, self.mask = pad_device_data(fed)
         self.clustering_stats: Dict = {}
@@ -196,6 +239,25 @@ class HFLFramework:
 
         if self.cfg.engine == "sequential":
             T_i, E_i = self._sequential_alloc_cost_train(sched, assign)
+        elif self.codec.active:
+            dev_resid, edge_resid = self.codec_state
+            cohort_resid = jax.tree.map(lambda r: r[sched], dev_resid)
+            (self.model_params, (cohort_resid, edge_resid),
+             (T_i, E_i, _, _, _, _)) = round_step(
+                self.apply_fn, self.sp_round, self.model_params,
+                pop.u[sched], pop.D[sched], pop.p[sched], pop.g[sched],
+                pop.g_cloud, pop.B_m,
+                self.X[sched], self.y[sched], self.mask[sched],
+                pop.D[sched], jnp.asarray(assign), self.cfg.lr,
+                M=pop.n_edges, L=sp.L, Q=sp.Q,
+                alloc_steps=self.cfg.alloc_steps,
+                agg_kernel=self.cfg.agg_kernel, codec=self.codec,
+                codec_state=(cohort_resid, edge_resid),
+                codec_key=comp.round_key(self.codec, self.cfg.seed, i))
+            self.codec_state = (
+                jax.tree.map(lambda full, nr: full.at[sched].set(nr),
+                             dev_resid, cohort_resid),
+                edge_resid)
         else:
             self.model_params, (T_i, E_i, _, _, _, _) = round_step(
                 self.apply_fn, sp, self.model_params,
@@ -209,10 +271,13 @@ class HFLFramework:
 
         acc = evaluate_in_batches(self.apply_fn, self.model_params,
                                   self.fed.X_test, self.fed.y_test)
-        msg_bits = (sp.Q * H + pop.n_edges) * self.sp.model_bits
+        msg_bits = cm.round_msg_bits(self.sp, sp.Q * H, pop.n_edges,
+                                     msg_bits=self.uplink_bits)
         rec = {"iter": i, "acc": acc, "T_i": float(T_i), "E_i": float(E_i),
                "obj_i": float(E_i + sp.lam * T_i),
                "msg_bits": float(msg_bits),
+               "uplink_bytes": float(sp.Q * H * self.uplink_bits / 8),
+               "codec": self.codec.codec,
                "assign_latency_s": assign_latency,
                "H": H}
         self.history.append(rec)

@@ -49,7 +49,9 @@ def pad_device_data(fed: FederatedData, Dmax: Optional[int] = None):
 
 def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
                               sizes, assign, *, M: int, L: int, Q: int,
-                              lr: float, agg_kernel: bool = False):
+                              lr: float, agg_kernel: bool = False,
+                              codec=None, dev_resid=None, edge_resid=None,
+                              codec_key=None):
     """Algorithm 1, traceable core (no jit) — inlined by the fused round
     engine (``framework.round_step``) and vmapped by ``core.sweep``.
 
@@ -57,7 +59,25 @@ def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
     assign: (H,) edge ids. ``agg_kernel=True`` routes eqs. (2)-(3)
     through the fused masked-weight Pallas kernel (the one-hot + sizes go
     in raw; the normalised weight panel is built in-kernel, and vmapped
-    callers hit the lane-batched grid). Returns new global params."""
+    callers hit the lane-batched grid). Returns new global params.
+
+    With an active ``codec`` (:class:`repro.core.compression.
+    CompressionConfig`, a static arg), both uplinks are compressed:
+    devices encode their post-SGD delta vs the edge model they pulled
+    and edges aggregate the decoded deltas in delta space
+    (``edge' = edge + Σ w·decode(encode(delta))``, exactly eq. (2) when
+    the codec is lossless); after Q edge iterations each edge encodes
+    its delta vs the global model for the cloud hop. ``dev_resid``
+    ((H, ...) cohort-gathered) and ``edge_resid`` ((M, ...)) are the
+    error-feedback accumulators, updated every message; ``codec_key``
+    seeds stochastic rounding. Returns
+    ``(new_params, new_dev_resid, new_edge_resid)`` in this mode —
+    ``codec=None`` / ``codec="none"`` keeps the uncompressed trace (and
+    the single-value return) bit-for-bit.
+    """
+    compress = codec is not None and codec.active
+    if compress:
+        from repro.core import compression as comp
     H = sizes.shape[0]
     onehot = jax.nn.one_hot(assign, M, dtype=jnp.float32)      # (H, M)
     w_dev = sizes.astype(jnp.float32)                          # D_n
@@ -65,13 +85,20 @@ def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
     has_dev = edge_tot > 0
 
     if agg_kernel:
-        from repro.kernels.hier_agg.ops import masked_aggregate
+        from repro.kernels.hier_agg.ops import (masked_aggregate,
+                                                masked_decode_aggregate)
         # eq. (2): panel built in-kernel from membership rows + sizes
         edge_aggregate = functools.partial(masked_aggregate, onehot.T, w_dev)
         # eq. (3) = the same kernel with an all-ones (1, M) mask over the
         # per-edge cohort sizes D_{N_m} (empty edges weigh 0 already)
         cloud_aggregate = lambda flat: masked_aggregate(  # noqa: E731
             jnp.ones((1, M), jnp.float32), edge_tot, flat)[0]
+        # compression path: scales fold into the in-kernel panel, the
+        # wire-format q streams into the MXU undecoded
+        edge_dec_aggregate = functools.partial(
+            masked_decode_aggregate, onehot.T, w_dev)
+        cloud_dec_aggregate = lambda sc, q: masked_decode_aggregate(  # noqa: E731
+            jnp.ones((1, M), jnp.float32), edge_tot, sc, q)[0]
     else:
         # per-edge normalised device weights: (M, H)
         w_edge = (onehot.T * w_dev[None, :]) \
@@ -80,45 +107,103 @@ def hfl_global_iteration_core(apply_fn: Callable, global_params, X, y, mask,
         w_cloud = w_cloud / jnp.maximum(jnp.sum(w_cloud), 1.0)
         edge_aggregate = lambda flat: w_edge @ flat           # noqa: E731
         cloud_aggregate = lambda flat: w_cloud @ flat         # noqa: E731
+        if compress:
+            # einsum decode-aggregate oracle: dense decode, then matmul
+            edge_dec_aggregate = lambda sc, q: w_edge @ (     # noqa: E731
+                comp.decode_rows(codec, q, sc))
+            cloud_dec_aggregate = lambda sc, q: w_cloud @ (   # noqa: E731
+                comp.decode_rows(codec, q, sc))
 
     # edge models start from the global model
     edge_params = jax.tree.map(
         lambda g: jnp.broadcast_to(g[None], (M,) + g.shape), global_params)
 
-    def edge_iter(edge_params, _):
-        # each device pulls its edge's model
-        dev_params = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
-                                  edge_params)
-        dev_params = cohort_local_sgd(apply_fn, dev_params, X, y, mask, L, lr)
-        # (2): weighted average per edge; empty edges keep their model
-        # (aggregate in f32, carry the model dtype through the scan)
-        def agg(delta, old):
-            flat = delta.reshape(H, -1)
-            new = edge_aggregate(flat).reshape((M,) + delta.shape[1:])
-            keep = has_dev.reshape((M,) + (1,) * (delta.ndim - 1))
-            return jnp.where(keep, new, old).astype(old.dtype)
-        new_edge = jax.tree.map(agg, dev_params, edge_params)
-        return new_edge, None
+    if not compress:
+        def edge_iter(edge_params, _):
+            # each device pulls its edge's model
+            dev_params = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
+                                      edge_params)
+            dev_params = cohort_local_sgd(apply_fn, dev_params, X, y, mask,
+                                          L, lr)
+            # (2): weighted average per edge; empty edges keep their model
+            # (aggregate in f32, carry the model dtype through the scan)
+            def agg(delta, old):
+                flat = delta.reshape(H, -1)
+                new = edge_aggregate(flat).reshape((M,) + delta.shape[1:])
+                keep = has_dev.reshape((M,) + (1,) * (delta.ndim - 1))
+                return jnp.where(keep, new, old).astype(old.dtype)
+            new_edge = jax.tree.map(agg, dev_params, edge_params)
+            return new_edge, None
 
-    edge_params, _ = jax.lax.scan(edge_iter, edge_params, None, length=Q)
+        edge_params, _ = jax.lax.scan(edge_iter, edge_params, None, length=Q)
 
-    # (3): cloud aggregation, weights D_{N_m} (empty edges weight 0)
-    def cloud_agg(e):
-        flat = e.reshape(M, -1)
-        return cloud_aggregate(flat).reshape(e.shape[1:]).astype(e.dtype)
+        # (3): cloud aggregation, weights D_{N_m} (empty edges weight 0)
+        def cloud_agg(e):
+            flat = e.reshape(M, -1)
+            return cloud_aggregate(flat).reshape(e.shape[1:]).astype(e.dtype)
 
-    return jax.tree.map(cloud_agg, edge_params)
+        return jax.tree.map(cloud_agg, edge_params)
+
+    # ---- compressed path: both uplinks ship encoded deltas; aggregation
+    #      runs in delta space (edge' = edge + Σ w·decoded_delta, exactly
+    #      eq. (2) for a lossless codec since the weights sum to 1 per
+    #      non-empty edge — empty edges get zero weight mass and keep
+    #      their model automatically).
+    keys = jax.random.split(codec_key, Q + 1)
+
+    def edge_iter_c(carry, k_round):
+        edge_params, resid = carry
+        pulled = jax.tree.map(lambda e: jnp.take(e, assign, axis=0),
+                              edge_params)
+        trained = cohort_local_sgd(apply_fn, pulled, X, y, mask, L, lr)
+        t_leaves, treedef = jax.tree.flatten(trained)
+        p_leaves = jax.tree.leaves(pulled)
+        r_leaves = jax.tree.leaves(resid)
+        e_leaves = jax.tree.leaves(edge_params)
+        ks = jax.random.split(k_round, len(t_leaves))
+        new_e, new_r = [], []
+        for t, p_, r, e, k in zip(t_leaves, p_leaves, r_leaves, e_leaves,
+                                  ks):
+            d = (t - p_).reshape(H, -1).astype(jnp.float32)
+            q, sc, nr = comp.encode_leaf(codec, k, d, r.reshape(H, -1))
+            dm = edge_dec_aggregate(sc, q)                    # (M, p)
+            ef = e.reshape(M, -1) + dm
+            new_e.append(ef.reshape(e.shape).astype(e.dtype))
+            new_r.append(nr.reshape(r.shape))
+        return (treedef.unflatten(new_e), treedef.unflatten(new_r)), None
+
+    (edge_params, dev_resid), _ = jax.lax.scan(
+        edge_iter_c, (edge_params, dev_resid), keys[:Q])
+
+    # cloud hop: each edge encodes its delta vs the global model (3)
+    e_leaves, treedef = jax.tree.flatten(edge_params)
+    g_leaves = jax.tree.leaves(global_params)
+    r_leaves = jax.tree.leaves(edge_resid)
+    ks = jax.random.split(keys[Q], len(e_leaves))
+    new_g, new_r = [], []
+    for e, g, r, k in zip(e_leaves, g_leaves, r_leaves, ks):
+        d = (e.reshape(M, -1) - g.reshape(1, -1)).astype(jnp.float32)
+        q, sc, nr = comp.encode_leaf(codec, k, d, r.reshape(M, -1))
+        gf = g.reshape(-1) + cloud_dec_aggregate(sc, q)
+        new_g.append(gf.reshape(g.shape).astype(g.dtype))
+        new_r.append(nr.reshape(r.shape))
+    return (treedef.unflatten(new_g), dev_resid, treedef.unflatten(new_r))
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn", "M", "L", "Q",
-                                             "agg_kernel"))
+                                             "agg_kernel", "codec"))
 def hfl_global_iteration(apply_fn: Callable, global_params, X, y, mask,
                          sizes, assign, *, M: int, L: int, Q: int,
-                         lr: float, agg_kernel: bool = False):
+                         lr: float, agg_kernel: bool = False,
+                         codec=None, dev_resid=None, edge_resid=None,
+                         codec_key=None):
     """Jitted Algorithm 1 — see ``hfl_global_iteration_core``."""
     return hfl_global_iteration_core(apply_fn, global_params, X, y, mask,
                                      sizes, assign, M=M, L=L, Q=Q, lr=lr,
-                                     agg_kernel=agg_kernel)
+                                     agg_kernel=agg_kernel, codec=codec,
+                                     dev_resid=dev_resid,
+                                     edge_resid=edge_resid,
+                                     codec_key=codec_key)
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

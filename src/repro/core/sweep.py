@@ -34,6 +34,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
+from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core.assignment.drl import drl_assign_traced
 from repro.core.assignment.geo import GeoAssigner, geo_assign_traced
@@ -113,7 +114,8 @@ def _sweep_round_lanes(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
                        p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b,
                        sizes_b, sched_b, assign_b, lr, done_b, *, M: int,
                        L: int, Q: int, alloc_steps: int, train_only: bool,
-                       agg_kernel: bool, lane_chunk: Optional[int] = None):
+                       agg_kernel: bool, lane_chunk: Optional[int] = None,
+                       codec=None, codec_state_b=None, codec_keys_b=None):
     """Traceable lane-vmapped round body shared by the single-device
     ``sweep_round`` jit and the ``shard_map`` blocks of
     ``sweep_round_sharded`` (each device runs this on its lane block).
@@ -125,17 +127,47 @@ def _sweep_round_lanes(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
     and XLA stops batch-fusing the tiny per-lane ops into bandwidth-
     bound monsters, which measures 1.8-2.4x by itself at S=128 across
     runs (see ``BENCH_sweep_shard.json``); must divide the lane-axis
-    length."""
+    length.
+
+    With an active ``codec`` the compressed round engine runs instead:
+    ``codec_state_b`` is ``(dev_resid (S, N, ...), edge_resid
+    (S, M, ...))`` error-feedback trees (cohort rows gathered/scattered
+    per lane, frozen on done lanes like the params), ``codec_keys_b``
+    (S, 2) per-lane round keys, and the return gains a third element —
+    the updated state. Inactive codec keeps the seed trace untouched.
+    """
+    codec_on = codec is not None and codec.active
 
     def one(params, u, D, p, g, g_cloud, B_m, X, y, mask, sizes, sched,
-            assign, done):
+            assign, done, *cstate):
+        if codec_on:
+            dev_resid, edge_resid, ckey = cstate
+            cohort_resid = jax.tree.map(lambda r: r[sched], dev_resid)
         if train_only:
-            new_params = hfl_global_iteration_core(
-                apply_fn, params, X[sched], y[sched], mask[sched],
-                sizes[sched], assign, M=M, L=L, Q=Q, lr=lr,
-                agg_kernel=agg_kernel)
+            if codec_on:
+                new_params, cohort_resid, new_edge_resid = \
+                    hfl_global_iteration_core(
+                        apply_fn, params, X[sched], y[sched], mask[sched],
+                        sizes[sched], assign, M=M, L=L, Q=Q, lr=lr,
+                        agg_kernel=agg_kernel, codec=codec,
+                        dev_resid=cohort_resid, edge_resid=edge_resid,
+                        codec_key=ckey)
+            else:
+                new_params = hfl_global_iteration_core(
+                    apply_fn, params, X[sched], y[sched], mask[sched],
+                    sizes[sched], assign, M=M, L=L, Q=Q, lr=lr,
+                    agg_kernel=agg_kernel)
             zero = jnp.zeros(())
             T_i, E_i = zero, zero
+        elif codec_on:
+            new_params, (cohort_resid, new_edge_resid), \
+                (T_i, E_i, _, _, _, _) = round_step_core(
+                    apply_fn, sp, params, u[sched], D[sched], p[sched],
+                    g[sched], g_cloud, B_m, X[sched], y[sched],
+                    mask[sched], sizes[sched], assign, lr, M=M, L=L, Q=Q,
+                    alloc_steps=alloc_steps, agg_kernel=agg_kernel,
+                    codec=codec, codec_state=(cohort_resid, edge_resid),
+                    codec_key=ckey)
         else:
             new_params, (T_i, E_i, _, _, _, _) = round_step_core(
                 apply_fn, sp, params, u[sched], D[sched], p[sched],
@@ -144,11 +176,23 @@ def _sweep_round_lanes(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
                 alloc_steps=alloc_steps, agg_kernel=agg_kernel)
         new_params = jax.tree.map(
             lambda old, new: jnp.where(done, old, new), params, new_params)
-        return new_params, (jnp.where(done, 0.0, T_i),
-                            jnp.where(done, 0.0, E_i))
+        costs = (jnp.where(done, 0.0, T_i), jnp.where(done, 0.0, E_i))
+        if not codec_on:
+            return new_params, costs
+        freeze = functools.partial(
+            jax.tree.map, lambda old, new: jnp.where(done, old, new))
+        new_dev_resid = freeze(
+            dev_resid, jax.tree.map(
+                lambda full, nr: full.at[sched].set(nr), dev_resid,
+                cohort_resid))
+        return new_params, costs, (new_dev_resid,
+                                   freeze(edge_resid, new_edge_resid))
 
     lane_in = (params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
                mask_b, sizes_b, sched_b, assign_b, done_b)
+    if codec_on:
+        lane_in = lane_in + (codec_state_b[0], codec_state_b[1],
+                             codec_keys_b)
     if lane_chunk is None:
         return jax.vmap(one)(*lane_in)
     n = sched_b.shape[0]
@@ -165,12 +209,13 @@ def _sweep_round_lanes(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
 
 @functools.partial(jax.jit, static_argnames=(
     "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
-    "agg_kernel", "lane_chunk"))
+    "agg_kernel", "lane_chunk", "codec"))
 def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
                 g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, sched_b,
                 assign_b, lr, *, M: int, L: int, Q: int, alloc_steps: int,
                 train_only: bool = False, agg_kernel: bool = False,
-                lane_chunk: Optional[int] = None, done_b=None):
+                lane_chunk: Optional[int] = None, done_b=None,
+                codec=None, codec_state_b=None, codec_keys_b=None):
     """One fused round for S lanes at once.
 
     Population/data arrays carry a leading lane axis (S, ...); sched_b
@@ -197,18 +242,20 @@ def sweep_round(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b, p_b,
         apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
         y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b, M=M, L=L, Q=Q,
         alloc_steps=alloc_steps, train_only=train_only,
-        agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+        agg_kernel=agg_kernel, lane_chunk=lane_chunk, codec=codec,
+        codec_state_b=codec_state_b, codec_keys_b=codec_keys_b)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "apply_fn", "sp", "M", "L", "Q", "alloc_steps", "train_only",
-    "agg_kernel", "mesh", "lane_chunk"))
+    "agg_kernel", "mesh", "lane_chunk", "codec"))
 def sweep_round_sharded(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
                         p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b,
                         sizes_b, sched_b, assign_b, lr, *, M: int, L: int,
                         Q: int, alloc_steps: int, mesh,
                         train_only: bool = False, agg_kernel: bool = False,
-                        lane_chunk: Optional[int] = None, done_b=None):
+                        lane_chunk: Optional[int] = None, done_b=None,
+                        codec=None, codec_state_b=None, codec_keys_b=None):
     """``sweep_round`` laid out over a 1-D ``Mesh(("lane",))``.
 
     Same args/semantics as ``sweep_round`` plus a static ``mesh``
@@ -228,21 +275,31 @@ def sweep_round_sharded(apply_fn, sp: cm.SystemParams, params_b, u_b, D_b,
     if done_b is None:
         done_b = jnp.zeros((sched_b.shape[0],), bool)
     lane, rep = PartitionSpec("lane"), PartitionSpec()
+    codec_on = codec is not None and codec.active
 
     def block(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
-              mask_b, sizes_b, sched_b, assign_b, lr, done_b):
+              mask_b, sizes_b, sched_b, assign_b, lr, done_b, *cstate):
+        kw = {}
+        if codec_on:
+            kw = dict(codec=codec, codec_state_b=(cstate[0], cstate[1]),
+                      codec_keys_b=cstate[2])
         return _sweep_round_lanes(
             apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
             X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b,
             M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
-            agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+            agg_kernel=agg_kernel, lane_chunk=lane_chunk, **kw)
 
-    sharded = shard_map(block, mesh=mesh,
-                        in_specs=(lane,) * 13 + (rep, lane),
-                        out_specs=(lane, (lane, lane)),
-                        check_rep=False)
-    return sharded(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
-                   y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b)
+    in_specs = (lane,) * 13 + (rep, lane)
+    out_specs = (lane, (lane, lane))
+    args = (params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
+            mask_b, sizes_b, sched_b, assign_b, lr, done_b)
+    if codec_on:
+        in_specs = in_specs + (lane, lane, lane)
+        out_specs = (lane, (lane, lane), (lane, lane))
+        args = args + (codec_state_b[0], codec_state_b[1], codec_keys_b)
+    sharded = shard_map(block, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    return sharded(*args)
 
 
 def _sweep_eval_lanes(apply_fn, params_b, Xt_b, yt_b):
@@ -270,11 +327,12 @@ def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
                       g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b,
                       dev_pos_b, edge_pos_b, Xt_b, yt_b, sched_rs,
                       sched_state_b, assign_keys_b, done_b, drl_params, lr,
+                      codec_state_b, codec_base_b, codec_r0,
                       *, M: int, L: int, Q: int, alloc_steps: int,
                       train_only: bool, agg_kernel: bool,
                       lane_chunk: Optional[int], assign: str, hfel_cfg,
                       target_acc: Optional[float], n_rounds: int,
-                      traced_sched):
+                      traced_sched, codec=None):
     """Traceable R-round S-lane sweep body: ``lax.scan`` over rounds of
     (scheduler step -> traced assignment -> lane-vmapped round body ->
     in-scan eval -> done-mask update). Shared by the single-device
@@ -295,8 +353,15 @@ def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
 
     Returns ((params_b, done_b, sched_state_b, assign_keys_b),
     (acc (R, S), T_i (R, S), E_i (R, S))).
+
+    With an active ``codec`` the carry additionally holds the per-lane
+    error-feedback state ``codec_state_b`` and a round counter (seeded
+    at ``codec_r0``) — codec keys are re-derived in-scan as
+    ``fold_in(codec_base_b[lane], round)``, the exact stream the host
+    loop draws, so fused and host compressed sweeps stay in lockstep.
     """
     hfel_kw = dict(hfel_cfg) if hfel_cfg is not None else None
+    codec_on = codec is not None and codec.active
 
     def assign_lane(u, D, p, g, g_cloud, B_m, dev_pos, edge_pos, sched,
                     key):
@@ -312,7 +377,11 @@ def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
         return a
 
     def step(carry, xs):
-        params_b, done_b, sched_state_b, keys_b = carry
+        if codec_on:
+            (params_b, done_b, sched_state_b, keys_b, codec_state_b,
+             r) = carry
+        else:
+            params_b, done_b, sched_state_b, keys_b = carry
         if traced_sched is None:
             sched_b = xs
         else:
@@ -323,17 +392,34 @@ def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
         assign_b = jax.vmap(assign_lane)(
             u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, dev_pos_b, edge_pos_b,
             sched_b, sub_b)
-        new_params, (T_i, E_i) = _sweep_round_lanes(
-            apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b,
-            X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr, done_b,
-            M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
-            agg_kernel=agg_kernel, lane_chunk=lane_chunk)
+        if codec_on:
+            ckeys_b = jax.vmap(
+                lambda k: jax.random.fold_in(k, r))(codec_base_b)
+            new_params, (T_i, E_i), codec_state_b = _sweep_round_lanes(
+                apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b,
+                B_m_b, X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr,
+                done_b, M=M, L=L, Q=Q, alloc_steps=alloc_steps,
+                train_only=train_only, agg_kernel=agg_kernel,
+                lane_chunk=lane_chunk, codec=codec,
+                codec_state_b=codec_state_b, codec_keys_b=ckeys_b)
+        else:
+            new_params, (T_i, E_i) = _sweep_round_lanes(
+                apply_fn, sp, params_b, u_b, D_b, p_b, g_b, g_cloud_b,
+                B_m_b, X_b, y_b, mask_b, sizes_b, sched_b, assign_b, lr,
+                done_b, M=M, L=L, Q=Q, alloc_steps=alloc_steps,
+                train_only=train_only, agg_kernel=agg_kernel,
+                lane_chunk=lane_chunk)
         acc = _sweep_eval_lanes(apply_fn, new_params, Xt_b, yt_b)
         if target_acc is not None:
             done_b = done_b | (acc >= target_acc)
+        if codec_on:
+            return (new_params, done_b, sched_state_b, keys_b,
+                    codec_state_b, r + 1), (acc, T_i, E_i)
         return (new_params, done_b, sched_state_b, keys_b), (acc, T_i, E_i)
 
     carry0 = (params_b, done_b, sched_state_b, assign_keys_b)
+    if codec_on:
+        carry0 = carry0 + (codec_state_b, codec_r0)
     xs = sched_rs if traced_sched is None else None
     return jax.lax.scan(step, carry0, xs,
                         length=n_rounds if xs is None else None)
@@ -342,19 +428,20 @@ def _sweep_scan_lanes(apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b,
 _SCAN_STATICS = ("apply_fn", "sp", "sp_assign", "M", "L", "Q",
                  "alloc_steps", "train_only", "agg_kernel", "lane_chunk",
                  "assign", "hfel_cfg", "target_acc", "n_rounds",
-                 "traced_sched")
+                 "traced_sched", "codec")
 
 
 @functools.partial(jax.jit, static_argnames=_SCAN_STATICS)
 def sweep_scan(apply_fn, sp: cm.SystemParams, sp_assign, params_b, u_b,
                D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b,
                dev_pos_b, edge_pos_b, Xt_b, yt_b, sched_rs, sched_state_b,
-               assign_keys_b, done_b, drl_params, lr, *, M: int, L: int,
+               assign_keys_b, done_b, drl_params, lr, codec_state_b=None,
+               codec_base_b=None, codec_r0=None, *, M: int, L: int,
                Q: int, alloc_steps: int, train_only: bool = False,
                agg_kernel: bool = False, lane_chunk: Optional[int] = None,
                assign: str = "geo", hfel_cfg=None,
                target_acc: Optional[float] = None, n_rounds: int = 1,
-               traced_sched=None):
+               traced_sched=None, codec=None):
     """An R-round, S-lane sweep as ONE jitted dispatch.
 
     The whole-sweep analogue of ``sweep_round``: scheduling, assignment
@@ -373,10 +460,11 @@ def sweep_scan(apply_fn, sp: cm.SystemParams, sp_assign, params_b, u_b,
         apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b, g_b, g_cloud_b,
         B_m_b, X_b, y_b, mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b,
         yt_b, sched_rs, sched_state_b, assign_keys_b, done_b, drl_params,
-        lr, M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
+        lr, codec_state_b, codec_base_b, codec_r0,
+        M=M, L=L, Q=Q, alloc_steps=alloc_steps, train_only=train_only,
         agg_kernel=agg_kernel, lane_chunk=lane_chunk, assign=assign,
         hfel_cfg=hfel_cfg, target_acc=target_acc, n_rounds=n_rounds,
-        traced_sched=traced_sched)
+        traced_sched=traced_sched, codec=codec)
 
 
 @functools.partial(jax.jit, static_argnames=_SCAN_STATICS + ("mesh",))
@@ -384,13 +472,15 @@ def sweep_scan_sharded(apply_fn, sp: cm.SystemParams, sp_assign, params_b,
                        u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
                        mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b, yt_b,
                        sched_rs, sched_state_b, assign_keys_b, done_b,
-                       drl_params, lr, *, M: int, L: int, Q: int,
-                       alloc_steps: int, mesh, train_only: bool = False,
+                       drl_params, lr, codec_state_b=None,
+                       codec_base_b=None, codec_r0=None, *, M: int, L: int,
+                       Q: int, alloc_steps: int, mesh,
+                       train_only: bool = False,
                        agg_kernel: bool = False,
                        lane_chunk: Optional[int] = None,
                        assign: str = "geo", hfel_cfg=None,
                        target_acc: Optional[float] = None,
-                       n_rounds: int = 1, traced_sched=None):
+                       n_rounds: int = 1, traced_sched=None, codec=None):
     """``sweep_scan`` laid out over a 1-D ``Mesh(("lane",))``.
 
     Each device runs the ENTIRE R-round scan — traced scheduling,
@@ -405,30 +495,40 @@ def sweep_scan_sharded(apply_fn, sp: cm.SystemParams, sp_assign, params_b,
     from repro.parallel.sharding import round_lane_spec
     lane, rep = PartitionSpec("lane"), PartitionSpec()
     rlane = round_lane_spec()
+    codec_on = codec is not None and codec.active
 
     def block(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b, y_b,
               mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b, yt_b,
               sched_rs, sched_state_b, assign_keys_b, done_b, drl_params,
-              lr):
+              lr, *cargs):
+        cstate, cbase, cr0 = cargs if codec_on else (None, None, None)
         return _sweep_scan_lanes(
             apply_fn, sp, sp_assign, params_b, u_b, D_b, p_b, g_b,
             g_cloud_b, B_m_b, X_b, y_b, mask_b, sizes_b, dev_pos_b,
             edge_pos_b, Xt_b, yt_b, sched_rs, sched_state_b,
-            assign_keys_b, done_b, drl_params, lr, M=M, L=L, Q=Q,
+            assign_keys_b, done_b, drl_params, lr, cstate, cbase, cr0,
+            M=M, L=L, Q=Q,
             alloc_steps=alloc_steps, train_only=train_only,
             agg_kernel=agg_kernel, lane_chunk=lane_chunk, assign=assign,
             hfel_cfg=hfel_cfg, target_acc=target_acc, n_rounds=n_rounds,
-            traced_sched=traced_sched)
+            traced_sched=traced_sched, codec=codec)
 
+    in_specs = (lane,) * 15 + (rlane, lane, lane, lane, rep, rep)
+    carry_specs = (lane, lane, lane, lane)
+    args = (params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
+            y_b, mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b,
+            yt_b, sched_rs, sched_state_b, assign_keys_b, done_b,
+            drl_params, lr)
+    if codec_on:
+        in_specs = in_specs + (lane, lane, rep)
+        carry_specs = carry_specs + (lane, rep)
+        args = args + (codec_state_b, codec_base_b, codec_r0)
     sharded = shard_map(
         block, mesh=mesh,
-        in_specs=(lane,) * 15 + (rlane, lane, lane, lane, rep, rep),
-        out_specs=((lane, lane, lane, lane), (rlane, rlane, rlane)),
+        in_specs=in_specs,
+        out_specs=(carry_specs, (rlane, rlane, rlane)),
         check_rep=False)
-    return sharded(params_b, u_b, D_b, p_b, g_b, g_cloud_b, B_m_b, X_b,
-                   y_b, mask_b, sizes_b, dev_pos_b, edge_pos_b, Xt_b,
-                   yt_b, sched_rs, sched_state_b, assign_keys_b, done_b,
-                   drl_params, lr)
+    return sharded(*args)
 
 
 def _mod_assign(pop: cm.Population, sched: np.ndarray, rng) -> np.ndarray:
@@ -507,11 +607,14 @@ class SweepRunner:
                  *, lr: float = 0.01, alloc_steps: int = 100,
                  model_seed: int = 0, agg_kernel: bool = False,
                  shard: bool = False, mesh=None,
-                 lane_chunk: Optional[int] = None):
+                 lane_chunk: Optional[int] = None,
+                 compression: Optional[comp.CompressionConfig] = None):
         assert len(worlds) >= 1
         self.sp, self.lr, self.alloc_steps = sp, lr, alloc_steps
         self.agg_kernel = agg_kernel
         self.lane_chunk = lane_chunk
+        self.codec = (compression if compression is not None
+                      else comp.CompressionConfig())
         self.pops = [w[0] for w in worlds]
         self.feds = [w[1] for w in worlds]
         self.S = len(worlds)
@@ -565,9 +668,46 @@ class SweepRunner:
         self.params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
         self.apply_fn = cnn.cnn_apply
         self.model_bits = tree_bytes(inits[0]) * 8
+        # codec="none" gives exactly model_bits, so the sp the round jits
+        # see is value-identical to the uncompressed runner's (same jit
+        # cache entry -> bitwise parity).
+        self.uplink_bits = comp.message_bits(self.codec, inits[0])
 
         if self.mesh is not None:
             self._shard_lane_stacks()
+
+    def _codec_state0(self):
+        """Fresh lane-stacked error-feedback state: ``(dev_resid
+        (S_pad, N, ...), edge_resid (S_pad, M, ...))`` zero trees shaped
+        like one lane's params, lane-sharded when the runner is. None for
+        the identity codec."""
+        if not self.codec.active:
+            return None
+        p0 = jax.tree.map(lambda x: x[0], self.params0)
+        state = (comp.init_state(self.codec, p0, self.N),
+                 comp.init_state(self.codec, p0, self.M))
+        state = jax.tree.map(
+            lambda z: jnp.zeros((self.S_pad,) + z.shape, z.dtype), state)
+        if self.mesh is not None:
+            from repro.parallel.sharding import lane_sharding
+            sh = lane_sharding(self.mesh)
+            state = jax.tree.map(lambda z: jax.device_put(z, sh), state)
+        return state
+
+    def _codec_base_keys(self, seeds):
+        """Per-lane codec key bases ``fold_in(PRNGKey(codec.seed),
+        lane_seed)`` — the host loop folds the round index in per round,
+        the fused scan folds the carried round counter in in-scan, so
+        both engines draw the identical ``compression.round_key``
+        stream."""
+        lane_seeds = jnp.asarray(
+            list(seeds) + [seeds[0]] * self._n_dead, jnp.uint32)
+        base = jax.random.PRNGKey(self.codec.seed)
+        keys = jax.vmap(lambda s: jax.random.fold_in(base, s))(lane_seeds)
+        if self.mesh is not None:
+            from repro.parallel.sharding import lane_sharding
+            keys = jax.device_put(keys, lane_sharding(self.mesh))
+        return keys
 
     def _shard_lane_stacks(self):
         """Pad every lane-stacked array up to S_pad with clones of lane 0
@@ -668,7 +808,11 @@ class SweepRunner:
         if seeds is None:
             seeds = list(range(self.S))
         rngs = [np.random.default_rng(s) for s in seeds]
-        sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
+        sp = dataclasses.replace(self.sp,
+                                 model_bits=float(self.uplink_bits))
+        codec_on = self.codec.active
+        cstate = self._codec_state0()
+        cbase = self._codec_base_keys(seeds) if codec_on else None
 
         params_b = self.params0
         accs: List[np.ndarray] = []
@@ -682,7 +826,7 @@ class SweepRunner:
         done[self.S:] = True
         scheds = [None] * self.S
         assigns = [None] * self.S
-        for _ in range(n_rounds):
+        for r_i in range(n_rounds):
             # done lanes are frozen: reuse their last schedule/assignment
             # instead of spending scheduler rng and assignment search on
             # a lane that no longer trains.
@@ -713,24 +857,34 @@ class SweepRunner:
             sched_b = jnp.asarray(np.stack(scheds + pad))
             assign_b = jnp.asarray(np.stack(
                 assigns + [assigns[0]] * self._n_dead))
+            ckw = {}
+            if codec_on:
+                ckw = dict(codec=self.codec, codec_state_b=cstate,
+                           codec_keys_b=jax.vmap(
+                               lambda k: jax.random.fold_in(k, r_i))(cbase))
             if self.mesh is not None:
-                params_b, (T_i, E_i) = sweep_round_sharded(
+                out = sweep_round_sharded(
                     self.apply_fn, sp, params_b, self.u_b, self.D_b,
                     self.p_b, self.g_b, self.g_cloud_b, self.B_m_b,
                     self.X_b, self.y_b, self.mask_b, sizes_b, sched_b,
                     assign_b, self.lr, M=self.M, L=sp.L, Q=sp.Q,
                     alloc_steps=self.alloc_steps, mesh=self.mesh,
                     train_only=train_only, agg_kernel=self.agg_kernel,
-                    lane_chunk=self.lane_chunk, done_b=jnp.asarray(done))
+                    lane_chunk=self.lane_chunk, done_b=jnp.asarray(done),
+                    **ckw)
             else:
-                params_b, (T_i, E_i) = sweep_round(
+                out = sweep_round(
                     self.apply_fn, sp, params_b, self.u_b, self.D_b,
                     self.p_b, self.g_b, self.g_cloud_b, self.B_m_b,
                     self.X_b, self.y_b, self.mask_b, sizes_b, sched_b,
                     assign_b, self.lr, M=self.M, L=sp.L, Q=sp.Q,
                     alloc_steps=self.alloc_steps, train_only=train_only,
                     agg_kernel=self.agg_kernel, lane_chunk=self.lane_chunk,
-                    done_b=jnp.asarray(done))
+                    done_b=jnp.asarray(done), **ckw)
+            if codec_on:
+                params_b, (T_i, E_i), cstate = out
+            else:
+                params_b, (T_i, E_i) = out
             acc_full = self._eval(params_b)              # (S_pad,)
             acc = acc_full[:self.S]
             accs.append(acc)
@@ -751,10 +905,14 @@ class SweepRunner:
                              reached.argmax(axis=1) + 1, R)
         else:
             iters = np.full(self.S, R)
-        msg_bits = (sp.Q * H + self.M) * sp.model_bits
+        msg_bits = cm.round_msg_bits(self.sp, sp.Q * H, self.M,
+                                     msg_bits=self.uplink_bits)
         return {"acc": acc_a, "T_i": T_a, "E_i": E_a,
                 "obj": E_a + sp.lam * T_a, "iters": iters,
-                "msg_bits_per_round": float(msg_bits), "H": H}
+                "msg_bits_per_round": float(msg_bits), "H": H,
+                "codec": self.codec.codec,
+                "uplink_bits_per_msg": float(self.uplink_bits),
+                "uplink_bytes_per_round": float(msg_bits / 8)}
 
     # --------------------------------------------------------- fused run
 
@@ -791,7 +949,12 @@ class SweepRunner:
         sizes_b = self.D_b if sizes == "pop" else self.fed_sizes_b
         if seeds is None:
             seeds = list(range(self.S))
-        sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
+        sp = dataclasses.replace(self.sp,
+                                 model_bits=float(self.uplink_bits))
+        codec_on = self.codec.active
+        cstate = self._codec_state0()
+        cbase = self._codec_base_keys(seeds) if codec_on else None
+        cr = jnp.int32(0) if codec_on else None
 
         # -- scheduling: in-scan TracedFedAvg state, or an exact host
         #    precompute (scheduling never reads training state, so the
@@ -854,20 +1017,22 @@ class SweepRunner:
                        train_only=train_only, agg_kernel=self.agg_kernel,
                        lane_chunk=self.lane_chunk, assign=assign,
                        hfel_cfg=hfel_cfg, target_acc=target_acc,
-                       traced_sched=traced_sched)
+                       traced_sched=traced_sched,
+                       codec=self.codec if codec_on else None)
         if self.mesh is not None:
             fn = functools.partial(sweep_scan_sharded, mesh=self.mesh)
         else:
             fn = sweep_scan
 
         def dispatch(params_b, done_b, sched_state_b, assign_keys_b,
-                     sched_rs, n_r):
+                     sched_rs, n_r, codec_state_b=None, codec_r0=None):
             return fn(self.apply_fn, sp, self.sp, params_b, self.u_b,
                       self.D_b, self.p_b, self.g_b, self.g_cloud_b,
                       self.B_m_b, self.X_b, self.y_b, self.mask_b, sizes_b,
                       self.dev_pos_b, self.edge_pos_b, self.Xt_b, self.yt_b,
                       sched_rs, sched_state_b, assign_keys_b, done_b,
                       drl_params if assign == "drl" else None, self.lr,
+                      codec_state_b, cbase, codec_r0,
                       n_rounds=n_r, **statics)
 
         if oracle:
@@ -878,8 +1043,13 @@ class SweepRunner:
             for r in range(n_rounds):
                 xs_r = None if sched_rs is None else sched_rs[r:r + 1]
                 carry, (acc_r, T_r, E_r) = dispatch(
-                    params_b, done_b, sched_state_b, assign_keys_b, xs_r, 1)
-                params_b, done_b, sched_state_b, assign_keys_b = carry
+                    params_b, done_b, sched_state_b, assign_keys_b, xs_r, 1,
+                    cstate, cr)
+                if codec_on:
+                    (params_b, done_b, sched_state_b, assign_keys_b,
+                     cstate, cr) = carry
+                else:
+                    params_b, done_b, sched_state_b, assign_keys_b = carry
                 n_dispatches += 1
                 accs.append(np.asarray(acc_r)[0, :self.S])
                 Ts.append(np.asarray(T_r)[0, :self.S])
@@ -892,7 +1062,7 @@ class SweepRunner:
         else:
             _, (acc_rs, T_rs, E_rs) = dispatch(
                 params_b, done_b, sched_state_b, assign_keys_b, sched_rs,
-                n_rounds)
+                n_rounds, cstate, cr)
             n_dispatches = 1
             acc_a = np.asarray(acc_rs)[:, :self.S].T     # (S, R)
             T_a = np.asarray(T_rs)[:, :self.S].T
@@ -917,10 +1087,14 @@ class SweepRunner:
                              reached.argmax(axis=1) + 1, R)
         else:
             iters = np.full(self.S, R)
-        msg_bits = (sp.Q * H + self.M) * sp.model_bits
+        msg_bits = cm.round_msg_bits(self.sp, sp.Q * H, self.M,
+                                     msg_bits=self.uplink_bits)
         return {"acc": acc_a, "T_i": T_a, "E_i": E_a,
                 "obj": E_a + sp.lam * T_a, "iters": iters,
                 "msg_bits_per_round": float(msg_bits), "H": H,
+                "codec": self.codec.codec,
+                "uplink_bits_per_msg": float(self.uplink_bits),
+                "uplink_bytes_per_round": float(msg_bits / 8),
                 "n_dispatches": n_dispatches}
 
     def _eval(self, params_b, batch: int = 512) -> np.ndarray:

@@ -152,3 +152,81 @@ def masked_aggregate_pallas(mask: jnp.ndarray, sizes: jnp.ndarray,
     return masked_aggregate_batched_pallas(mask[None], sizes[None],
                                            deltas[None],
                                            interpret=interpret)[0]
+
+
+# ------------------------------------------- fused masked decode-aggregate
+
+def _masked_dec_kernel_batched(m_ref, s_ref, sc_ref, q_ref, out_ref):
+    m = m_ref[0].astype(jnp.float32)              # (Mp, Hp) membership
+    s = s_ref[0].astype(jnp.float32)              # (SUB, Hp) sizes row 0
+    sc = sc_ref[0].astype(jnp.float32)            # (SUB, Hp) scales row 0
+    w = m * s[0][None, :]                         # (Mp, Hp) mask·D_n
+    tot = jnp.sum(w, axis=1, keepdims=True)       # (Mp, 1)  D_{N_m}
+    # decode scale folded into the weight panel: the quantized update
+    # matrix goes into the MXU as-is, no dense decoded (Hp, BP) temp.
+    w = (w / jnp.maximum(tot, 1.0)) * sc[0][None, :]
+    q = q_ref[0].astype(jnp.float32)              # (Hp, BP) wire dtype
+    out_ref[0] = jax.lax.dot_general(
+        w, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _q_sublane(dtype) -> int:
+    """Sublane multiple for the quantized operand's dtype (the int8/bf16
+    min-tile constraint is tighter than the f32 SUB)."""
+    return {1: 32, 2: 16}.get(jnp.dtype(dtype).itemsize, SUB)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_decode_aggregate_batched_pallas(mask: jnp.ndarray,
+                                           sizes: jnp.ndarray,
+                                           scales: jnp.ndarray,
+                                           q: jnp.ndarray,
+                                           interpret: bool = True
+                                           ) -> jnp.ndarray:
+    """Masked-weight aggregation of *encoded* updates over a lane axis.
+
+    mask: (S, M, H); sizes: (S, H); scales: (S, H) per-message decode
+    scales; q: (S, H, P) quantized updates (int8 / bf16 / masked f32)
+    -> (S, M, P) f32 rows
+    ``Σ_h mask[m,h]·sizes[h]·scales[h]·q[h] / max(Σ_h mask[m,h]·sizes[h], 1)``
+    in ONE launch with grid (S, P/BP). This is eq. (2)/(3) applied to
+    decoded deltas ``scales[h]·q[h]`` with the decode folded into the
+    in-kernel weight panel — the dense decoded update matrix is never
+    materialised; the MXU streams the wire-format q directly.
+    """
+    S, M, H = mask.shape
+    assert sizes.shape == (S, H) and scales.shape == (S, H)
+    assert q.shape[:2] == (S, H)
+    P = q.shape[2]
+    hsub = max(SUB, _q_sublane(q.dtype))          # shared H padding
+    mp = _pad2(mask, SUB, hsub)
+    sp = _pad2(jnp.broadcast_to(sizes[:, None, :], (S, SUB, H)), SUB, hsub)
+    scp = _pad2(jnp.broadcast_to(scales[:, None, :], (S, SUB, H)), SUB, hsub)
+    qp = _pad2(q, hsub, BP)
+    Mp, Hp = mp.shape[1:]
+    Pp = qp.shape[2]
+    out = pl.pallas_call(
+        _masked_dec_kernel_batched,
+        grid=(S, Pp // BP),
+        in_specs=[
+            pl.BlockSpec((1, Mp, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, SUB, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, SUB, Hp), lambda s, p: (s, 0, 0)),
+            pl.BlockSpec((1, Hp, BP), lambda s, p: (s, 0, p)),
+        ],
+        out_specs=pl.BlockSpec((1, Mp, BP), lambda s, p: (s, 0, p)),
+        out_shape=jax.ShapeDtypeStruct((S, Mp, Pp), jnp.float32),
+        interpret=interpret,
+    )(mp, sp, scp, qp)
+    return out[:, :M, :P]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_decode_aggregate_pallas(mask: jnp.ndarray, sizes: jnp.ndarray,
+                                   scales: jnp.ndarray, q: jnp.ndarray,
+                                   interpret: bool = True) -> jnp.ndarray:
+    """mask: (M, H); sizes: (H,); scales: (H,); q: (H, P) -> (M, P) f32
+    — the S=1 lane of the batched decode-aggregate kernel."""
+    return masked_decode_aggregate_batched_pallas(
+        mask[None], sizes[None], scales[None], q[None],
+        interpret=interpret)[0]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.hier_agg.hier_agg import (
     masked_aggregate_batched_pallas, masked_aggregate_pallas,
+    masked_decode_aggregate_batched_pallas, masked_decode_aggregate_pallas,
     weighted_aggregate_batched_pallas, weighted_aggregate_pallas)
 
 
@@ -63,6 +64,24 @@ def _masked_cv_rule(axis_size, in_batched, mask, sizes, deltas):
     return out, True
 
 
+@jax.custom_batching.custom_vmap
+def _masked_dec_cv(mask: jnp.ndarray, sizes: jnp.ndarray,
+                   scales: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    return masked_decode_aggregate_pallas(mask, sizes, scales, q,
+                                          interpret=_default_interpret())
+
+
+@_masked_dec_cv.def_vmap
+def _masked_dec_cv_rule(axis_size, in_batched, mask, sizes, scales, q):
+    mask = _bcast(mask, in_batched[0], axis_size)
+    sizes = _bcast(sizes, in_batched[1], axis_size)
+    scales = _bcast(scales, in_batched[2], axis_size)
+    q = _bcast(q, in_batched[3], axis_size)
+    out = masked_decode_aggregate_batched_pallas(
+        mask, sizes, scales, q, interpret=_default_interpret())
+    return out, True
+
+
 def weighted_aggregate(weights: jnp.ndarray, deltas: jnp.ndarray,
                        interpret: bool | None = None) -> jnp.ndarray:
     """weights: (M, H) panel (rows pre-normalised); deltas: (H, P) ->
@@ -85,6 +104,24 @@ def masked_aggregate(mask: jnp.ndarray, sizes: jnp.ndarray,
     if interpret is None:
         return _masked_cv(mask, sizes, deltas)
     return masked_aggregate_pallas(mask, sizes, deltas, interpret=interpret)
+
+
+def masked_decode_aggregate(mask: jnp.ndarray, sizes: jnp.ndarray,
+                            scales: jnp.ndarray, q: jnp.ndarray,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Masked-weight aggregation of *encoded* updates (compression path).
+
+    mask: (M, H) membership rows; sizes: (H,); scales: (H,) per-message
+    decode scales; q: (H, P) wire-format updates (int8/bf16/masked f32)
+    -> (M, P) f32 rows ``Σ mask·sizes·scales·q / max(Σ mask·sizes, 1)``.
+    The decode scale is folded into the in-kernel weight panel so the
+    dense decoded update matrix never exists. vmap-aware like
+    ``masked_aggregate``.
+    """
+    if interpret is None:
+        return _masked_dec_cv(mask, sizes, scales, q)
+    return masked_decode_aggregate_pallas(mask, sizes, scales, q,
+                                          interpret=interpret)
 
 
 def aggregate_pytrees(weights: jnp.ndarray, device_params,

@@ -20,3 +20,14 @@ def masked_aggregate_ref(mask: jnp.ndarray, sizes: jnp.ndarray,
     tot = jnp.sum(w, axis=1, keepdims=True)
     w = w / jnp.maximum(tot, 1.0)
     return w @ deltas.astype(jnp.float32)
+
+
+def masked_decode_aggregate_ref(mask: jnp.ndarray, sizes: jnp.ndarray,
+                                scales: jnp.ndarray,
+                                q: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the decode-aggregate variant: the einsum path decodes
+    the wire-format updates densely (``scales[:, None] * q``) and then
+    masked-aggregates. mask: (M, H); sizes: (H,); scales: (H,);
+    q: (H, P) -> (M, P) f32."""
+    dec = q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return masked_aggregate_ref(mask, sizes, dec)

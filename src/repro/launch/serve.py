@@ -28,6 +28,7 @@ import os
 from typing import Dict, Optional
 
 from repro.checkpoint import ckpt
+from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core.async_engine import AsyncConfig, AsyncHFLEngine
 from repro.core.traffic import TrafficGenerator, TrafficParams
@@ -84,19 +85,24 @@ def run_serve(n_devices: int = 40, n_edges: int = 5, H: int = 20,
               out_json: Optional[str] = None, seed: int = 0,
               n_train: int = 2000, n_test: int = 500,
               alloc_steps: int = 100, L: Optional[int] = None,
-              Q: Optional[int] = None, log=print) -> Dict:
+              Q: Optional[int] = None, codec: str = "none",
+              topk_frac: float = 0.05, log=print) -> Dict:
     """Stream ``rounds`` async HFL rounds; returns the engine summary.
 
     Importable/testable core of the CLI: ``log`` receives one JSON line
-    per round (checkpoint/eval cadence is asserted by
-    ``tests/test_launch_cli.py`` through this entry point).
+    per round — with an uplink ``codec`` it carries the compressed
+    ``msg_bits``/``uplink_bytes``/``codec`` accounting (checkpoint/eval
+    cadence is asserted by ``tests/test_launch_cli.py`` through this
+    entry point).
     """
     sp, pop, fed = build_world(n_devices, n_edges, n_train, n_test, seed,
                                L=L, Q=Q)
     trace = build_trace(traffic, n_devices, seed)
     cfg = AsyncConfig(H=H, scheduler=scheduler, buffer_size=buffer_size,
                       staleness_exp=staleness_exp, seed=seed,
-                      alloc_steps=alloc_steps)
+                      alloc_steps=alloc_steps,
+                      compression=comp.CompressionConfig(
+                          codec=codec, topk_frac=topk_frac, seed=seed))
     engine = AsyncHFLEngine(sp, pop, fed, cfg, trace=trace)
 
     n_ckpts = 0
@@ -139,6 +145,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="summary JSON path")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codec", default="none", choices=comp.CODECS,
+                    help="uplink update codec (error-feedback residuals)")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="kept fraction per tensor for --codec topk")
     args = ap.parse_args()
 
     kw = dict(n_devices=args.devices, n_edges=args.edges, H=args.H,
@@ -146,7 +156,8 @@ def main() -> None:
               traffic=args.traffic, buffer_size=args.buffer_size,
               staleness_exp=args.staleness_exp,
               eval_every=args.eval_every, ckpt_every=args.ckpt_every,
-              ckpt_dir=args.ckpt_dir, out_json=args.out, seed=args.seed)
+              ckpt_dir=args.ckpt_dir, out_json=args.out, seed=args.seed,
+              codec=args.codec, topk_frac=args.topk_frac)
     if args.smoke:
         kw.update(n_devices=10, n_edges=3, H=6, rounds=3, n_train=300,
                   n_test=120, alloc_steps=40, L=2, Q=3)

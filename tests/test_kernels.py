@@ -7,8 +7,10 @@ import pytest
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.hier_agg.ops import (aggregate_pytrees, masked_aggregate,
+                                        masked_decode_aggregate,
                                         weighted_aggregate)
 from repro.kernels.hier_agg.ref import (masked_aggregate_ref,
+                                        masked_decode_aggregate_ref,
                                         weighted_aggregate_ref)
 from repro.kernels.kmeans_dist.ops import pairwise_sq_dists
 from repro.kernels.kmeans_dist.ref import pairwise_sq_dists_ref
@@ -145,6 +147,83 @@ def test_masked_agg_vmapped_lanes():
     ref2 = np.stack([np.asarray(masked_aggregate_ref(m0, s0,
                                                      jnp.asarray(d[s])))
                      for s in range(S)])
+    np.testing.assert_allclose(np.asarray(out2), ref2, rtol=1e-4, atol=1e-4)
+
+
+def _wire_q(rng, H, P, dtype):
+    """Wire-format update rows as each codec emits them: int8 quantized
+    levels, bf16 cast deltas, or dense-masked f32 (topk)."""
+    if dtype == jnp.int8:
+        return jnp.asarray(rng.integers(-127, 128, (H, P)), jnp.int8)
+    x = jax.random.normal(KEY, (H, P), jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("M,H,P", [
+    (5, 50, 114383),    # paper shape, unaligned everything
+    (3, 13, 257),       # non-multiple-of-8 M and H
+    (1, 3, 17),         # single edge (the cloud-hop layout)
+    (8, 128, 4096),     # exact tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_masked_decode_agg_sweep(M, H, P, dtype):
+    """Fused decode-aggregate == dense-decode-then-masked-aggregate
+    oracle, for every wire dtype the codecs emit (the int8 operand
+    forces the 32-sublane tile padding path)."""
+    rng = np.random.default_rng(0)
+    mask = _one_hot_mask(rng, M, H)
+    sizes = jnp.asarray(rng.uniform(10, 100, H).astype(np.float32))
+    scales = jnp.asarray(rng.uniform(1e-3, 2e-2, H).astype(np.float32))
+    q = _wire_q(rng, H, P, dtype)
+    out = masked_decode_aggregate(jnp.asarray(mask), sizes, scales, q,
+                                  interpret=True)
+    ref = masked_decode_aggregate_ref(jnp.asarray(mask), sizes, scales, q)
+    tol = 1e-4 if dtype != jnp.bfloat16 else 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_masked_decode_agg_unit_scales_match_masked_agg():
+    """With all-ones scales and an f32 operand the decode variant is the
+    plain masked aggregation."""
+    rng = np.random.default_rng(3)
+    M, H, P = 4, 21, 911
+    mask = jnp.asarray(_one_hot_mask(rng, M, H))
+    sizes = jnp.asarray(rng.uniform(10, 100, H).astype(np.float32))
+    d = jax.random.normal(KEY, (H, P), jnp.float32)
+    out = masked_decode_aggregate(mask, sizes, jnp.ones((H,)), d,
+                                  interpret=True)
+    ref = masked_aggregate(mask, sizes, d, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int8])
+def test_masked_decode_agg_vmapped_lanes(dtype):
+    """vmap over lanes hits the (S, P/BP) batched decode kernel via the
+    custom_vmap rule — including the cloud-hop case where the all-ones
+    mask is closed over unbatched."""
+    rng = np.random.default_rng(4)
+    S, M, H, P = 3, 5, 26, 700
+    masks = np.stack([_one_hot_mask(rng, M, H) for _ in range(S)])
+    sizes = rng.uniform(10, 100, (S, H)).astype(np.float32)
+    scales = rng.uniform(1e-3, 2e-2, (S, H)).astype(np.float32)
+    q = jnp.stack([_wire_q(rng, H, P, dtype) for _ in range(S)])
+    out = jax.vmap(masked_decode_aggregate)(
+        jnp.asarray(masks), jnp.asarray(sizes), jnp.asarray(scales), q)
+    ref = np.stack([np.asarray(masked_decode_aggregate_ref(
+        jnp.asarray(masks[s]), jnp.asarray(sizes[s]),
+        jnp.asarray(scales[s]), q[s])) for s in range(S)])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+    m0 = jnp.ones((1, M), jnp.float32)      # cloud hop: unbatched mask
+    s0 = jnp.asarray(sizes[:, :M])
+    sc0 = jnp.asarray(scales[:, :M])
+    q0 = q[:, :M]
+    out2 = jax.vmap(lambda ss, sc, qq: masked_decode_aggregate(
+        m0, ss, sc, qq))(s0, sc0, q0)
+    ref2 = np.stack([np.asarray(masked_decode_aggregate_ref(
+        m0, s0[s], sc0[s], q0[s])) for s in range(S)])
     np.testing.assert_allclose(np.asarray(out2), ref2, rtol=1e-4, atol=1e-4)
 
 
