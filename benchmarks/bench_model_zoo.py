@@ -1,0 +1,167 @@
+"""Micro-benchmark: per-arch HFL round cost/accuracy over the model zoo.
+
+Runs the fused single-dispatch sweep engine (``SweepRunner.run(...,
+fused=True)``) over every ``HFL_SMOKE_ARCHS`` payload — the paper CNN
+plus one dense-transformer, one SSM and one MoE smoke config on the
+synthetic sequence-classification task — and records, per arch:
+
+  * ``model_bits`` (the quantity every cost-model term prices),
+  * the accuracy trajectory over R rounds and the round costs T_i/E_i,
+  * ``fused_wall_ms`` / ``round_ms`` host wall time (compile included —
+    one dispatch per sweep, so this tracks trace+XLA cost per payload),
+  * ``n_dispatches`` (must equal the CNN engine's: the fused scan is
+    payload-agnostic, one dispatch regardless of pytree shape),
+  * int8-codec uplink accounting: the engine's ``uplink_bits_per_msg``
+    must equal ``compression.message_bits()`` on the arch's params
+    exactly (embedding + stacked-expert leaves included).
+
+Writes ``BENCH_model_zoo.json`` so future PRs track the trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_model_zoo [--smoke]
+
+``--smoke`` runs tiny shapes and asserts the model-zoo acceptance
+gates: >=2 non-CNN archs complete rounds with improving accuracy,
+``n_dispatches`` matches the CNN engine, codec accounting is exact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.registry import (HFL_SMOKE_ARCHS, get_hfl_spec,
+                                    get_smoke_config)
+from repro.core import compression as comp
+from repro.core import cost_model as cm
+from repro.core.sweep import SweepRunner, build_scheduler
+from repro.data import make_dataset, make_seq_dataset, partition_noniid
+from repro.utils import tree_bytes
+
+ROUNDS = 3
+ALLOC_STEPS = 25
+
+
+def _world_for(arch, n_devices, n_edges, n_train, n_test, seed=0):
+    sp = cm.SystemParams(n_devices=n_devices, n_edges=n_edges,
+                         d_range=(6, 10))
+    pop = cm.sample_population(sp, seed=seed)
+    if arch == "hfl-cnn":
+        X, y, Xt, yt = make_dataset("fmnist_syn", n_train=n_train,
+                                    n_test=n_test, seed=seed)
+    else:
+        vocab = min(257, get_smoke_config(arch).vocab_size)
+        X, y, Xt, yt = make_seq_dataset(n_train=n_train, n_test=n_test,
+                                        seed=seed, vocab_size=vocab)
+    fed = partition_noniid(X, y, Xt, yt, n_devices=n_devices,
+                           size_range=(6, 10), seed=seed)
+    return sp, pop, fed
+
+
+def _bench_arch(arch, sp, pop, fed, rounds, H, lr):
+    spec = get_hfl_spec(arch)
+    params = spec.init_fn(jax.random.PRNGKey(0), fed)
+    model_bits = tree_bytes(params) * 8
+
+    t0 = time.perf_counter()
+    runner = SweepRunner(sp, [(pop, fed)], lr=lr,
+                         alloc_steps=ALLOC_STEPS, arch=arch)
+    res = runner.run([build_scheduler("fedavg", fed, sp, H, seed=0)],
+                     rounds, assign="geo", fused=True)
+    wall = time.perf_counter() - t0
+
+    # int8 lane: the engine's wire accounting must equal message_bits()
+    ccfg = comp.CompressionConfig(codec="int8")
+    runner_c = SweepRunner(sp, [(pop, fed)], lr=lr,
+                           alloc_steps=ALLOC_STEPS, arch=arch,
+                           compression=ccfg)
+    res_c = runner_c.run([build_scheduler("fedavg", fed, sp, H, seed=0)],
+                         rounds, assign="geo", fused=True)
+    expect_bits = comp.message_bits(ccfg, params)
+    assert res_c["uplink_bits_per_msg"] == expect_bits, (
+        arch, res_c["uplink_bits_per_msg"], expect_bits)
+
+    accs = [float(a) for a in res["acc"][0]]
+    return {
+        "arch": arch, "family": spec.family,
+        "model_bits": float(model_bits),
+        "rounds": rounds, "H": H, "lr": lr,
+        "accs": accs, "final_acc": accs[-1],
+        "T_i": [float(t) for t in res["T_i"][0]],
+        "E_i": [float(e) for e in res["E_i"][0]],
+        "n_dispatches": int(res["n_dispatches"]),
+        "fused_wall_ms": wall * 1e3,
+        "round_ms": wall * 1e3 / rounds,
+        "int8_uplink_bits_per_msg": float(res_c["uplink_bits_per_msg"]),
+        "int8_final_acc": float(res_c["acc"][0, -1]),
+        "compression_x": float(model_bits / expect_bits),
+    }
+
+
+def run(out_json: str = "BENCH_model_zoo.json",
+        archs=HFL_SMOKE_ARCHS, n_devices: int = 8, n_edges: int = 2,
+        rounds: int = ROUNDS, n_train: int = 600, n_test: int = 128):
+    H = max(2, n_devices // 2)
+    result = {"N": n_devices, "M": n_edges, "rounds": rounds,
+              "archs": []}
+    for arch in archs:
+        sp, pop, fed = _world_for(arch, n_devices, n_edges, n_train,
+                                  n_test)
+        lr = 0.01 if arch == "hfl-cnn" else 0.3
+        r = _bench_arch(arch, sp, pop, fed, rounds, H, lr)
+        result["archs"].append(r)
+        emit(f"model_zoo/{arch}", r["round_ms"] * 1e3,
+             f"acc={r['final_acc']:.3f};bits={r['model_bits']:.0f};"
+             f"dispatches={r['n_dispatches']};x={r['compression_x']:.2f}")
+
+    # the fused engine is payload-agnostic: every arch, CNN included,
+    # runs its whole sweep in the same number of dispatches
+    cnn_d = next(r["n_dispatches"] for r in result["archs"]
+                 if r["arch"] == "hfl-cnn")
+    assert all(r["n_dispatches"] == cnn_d for r in result["archs"])
+    result["n_dispatches"] = cnn_d
+
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as fh:
+        json.dump(result, fh, indent=1)
+    return result
+
+
+def run_smoke(out_json: str = "results/BENCH_model_zoo_smoke.json"):
+    """Tiny-shape CI guard asserting the model-zoo acceptance gates."""
+    result = run(out_json=out_json, n_devices=8, n_edges=2, rounds=4,
+                 n_train=360, n_test=64)
+    with open(out_json) as fh:
+        loaded = json.load(fh)
+    by_arch = {r["arch"]: r for r in loaded["archs"]}
+    assert "hfl-cnn" in by_arch and len(by_arch) >= 3
+    improving = [a for a, r in by_arch.items()
+                 if a != "hfl-cnn" and r["accs"][-1] > r["accs"][0]]
+    assert len(improving) >= 2, improving     # transformer + ssm at least
+    families = {r["family"] for r in loaded["archs"]}
+    assert {"cnn", "dense"} <= families and len(families) >= 3
+    for r in loaded["archs"]:
+        assert r["n_dispatches"] == loaded["n_dispatches"]
+        assert r["int8_uplink_bits_per_msg"] < r["model_bits"]
+    emit("model_zoo/smoke", 0.0,
+         f"pass=True;improving={len(improving)}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; assert the model-zoo gates only")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,10 @@ reduced scale by default (CPU container); EXPERIMENTS.md records the
 scale factors and validates the paper's *relative* claims. ``--smoke``
 restricts to the perf-tracking micro-benchmarks (engine / hfel /
 hier_agg / drl_train / sweep_shard / sweep_fused / schedule_scale /
-async_engine) at their tiny CI shapes — the bench-smoke CI job runs
-exactly that and uploads the ``results/*.json`` outputs as artifacts.
-``--perf`` runs the same eight at full scale but writes the JSON under
+async_engine / comm_compress / model_zoo) at their tiny CI shapes — the
+bench-smoke CI job runs exactly that and uploads the ``results/*.json``
+outputs as artifacts.
+``--perf`` runs the same ten at full scale but writes the JSON under
 ``results/`` (gitignored), so the weekly CI job's artifacts are always
 freshly produced files, never the committed repo-root ``BENCH_*.json``.
 ``--check`` then compares the fresh smoke timings against the committed
@@ -159,7 +160,7 @@ def main() -> None:
                     help="table2|fig34|fig5|fig6|fig7|kernels|roofline|"
                          "engine|hfel|hier_agg|drl_train|sweep_shard|"
                          "sweep_fused|schedule_scale|async_engine|"
-                         "comm_compress")
+                         "comm_compress|model_zoo")
     ap.add_argument("--fast", action="store_true",
                     help="minimal iteration counts")
     ap.add_argument("--smoke", action="store_true",
@@ -255,6 +256,10 @@ def main() -> None:
         from benchmarks import bench_comm_compress
         _perf_bench(bench_comm_compress, "comm_compress")
 
+    def run_model_zoo():
+        from benchmarks import bench_model_zoo
+        _perf_bench(bench_model_zoo, "model_zoo")
+
     # fig6 reuses fig5's trained D3QN when both are selected, so order
     # matters: fig5 before fig6
     suites = [
@@ -274,11 +279,12 @@ def main() -> None:
         ("schedule_scale", run_schedule_scale),
         ("async_engine", run_async_engine),
         ("comm_compress", run_comm_compress),
+        ("model_zoo", run_model_zoo),
     ]
     if args.smoke or args.perf:
         perf_names = ("engine", "hfel", "hier_agg", "drl_train",
                       "sweep_shard", "sweep_fused", "schedule_scale",
-                      "async_engine", "comm_compress")
+                      "async_engine", "comm_compress", "model_zoo")
         suites = [(n, fn) for n, fn in suites if n in perf_names]
 
     names = [n for n, _ in suites]

@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 import importlib
-from typing import List
+from typing import List, Tuple
 
 from repro.configs.base import InputShape, ModelConfig
 
@@ -22,6 +23,36 @@ _MODULES = {
 }
 
 ARCH_IDS: List[str] = [a for a in _MODULES if a != "hfl-cnn"]
+
+# HFL payload archs exercised by tests/bench_model_zoo: the paper CNN
+# plus one arch per decoder family (dense / ssm / moe). Any _MODULES id
+# resolves through get_hfl_spec; these are the CI smoke set.
+HFL_SMOKE_ARCHS: Tuple[str, ...] = (
+    "hfl-cnn", "mistral-nemo-12b", "mamba2-2.7b", "qwen3-moe-235b-a22b")
+
+
+@functools.lru_cache(maxsize=None)
+def get_hfl_spec(arch: str):
+    """Resolve ``--arch`` to the :class:`repro.models.spec.ModelSpec`
+    the HFL engines train over.
+
+    ``hfl-cnn`` is the paper's FashionMNIST/CIFAR CNN (the default —
+    bitwise-identical to the pre-spec engines). Every other registry id
+    maps to its CPU-trainable ``smoke_config()`` variant (remat off,
+    f32) wrapped as a sequence classifier over the synthetic
+    ``make_seq_dataset`` task; the cost model prices whatever payload
+    comes back via ``model_bits``. Cached so repeated resolution returns
+    the SAME spec object — ``apply_fn`` is a static jit argument and
+    must not fragment the engines' jit caches.
+    """
+    from repro.models import spec as spec_lib
+    if arch == "hfl-cnn":
+        return spec_lib.cnn_spec()
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              remat=False, dtype="float32")
+    return spec_lib.seq_spec(arch, cfg)
 
 
 def get_config(arch: str) -> ModelConfig:

@@ -50,10 +50,10 @@ import numpy as np
 from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core import resource as ra
+from repro.configs.registry import get_hfl_spec
 from repro.core.hfl import evaluate_in_batches, pad_device_data
 from repro.core.local_train import cohort_local_sgd
 from repro.data.partition import FederatedData
-from repro.models import cnn
 from repro.utils import tree_bytes
 
 
@@ -218,6 +218,7 @@ class AsyncConfig:
     """Event-loop knobs. The defaults are the sync-parity setting:
     wait-for-all buffers, no jitter (pair with ``always_on`` traces)."""
     H: int = 20                     # scheduled cohort size
+    arch: str = "hfl-cnn"           # model payload (configs.registry id)
     scheduler: str = "fedavg"       # fedavg | ikc | vkc
     K: int = 10                     # clusters (ikc/vkc)
     staleness_exp: float = 0.5      # a in D_n/(1+staleness)^a
@@ -239,9 +240,10 @@ class AsyncHFLEngine:
     dispatch the scheduled cohort, deliver updates at trace-determined
     times, flush staleness-weighted edge buffers Q times per edge, then
     cloud-aggregate and advance the virtual clock by the round makespan.
-    The model/scheduler setup mirrors ``HFLFramework`` (same key
-    derivation for the CNN init, same ``model_bits`` patching) so sync
-    and async runs start from identical states.
+    The model/scheduler setup mirrors ``HFLFramework`` (same
+    ``cfg.arch``-resolved :class:`~repro.models.spec.ModelSpec`, same
+    key derivation for the model init, same ``model_bits`` patching) so
+    sync and async runs start from identical states for any payload.
     """
 
     def __init__(self, sp: cm.SystemParams, pop: cm.Population,
@@ -251,10 +253,9 @@ class AsyncHFLEngine:
         self.pop, self.cfg, self.fed = pop, cfg, fed
         key = jax.random.PRNGKey(cfg.seed)
         k_model, _, _ = jax.random.split(key, 3)
-        hw = fed.X_test.shape[1:3]
-        self.model_params = cnn.cnn_init(k_model, hw, fed.X_test.shape[3],
-                                         fed.n_classes)
-        self.apply_fn = cnn.cnn_apply
+        self.spec = get_hfl_spec(cfg.arch)
+        self.model_params = self.spec.init_fn(k_model, fed)
+        self.apply_fn = self.spec.apply_fn
         self.sp = dataclasses.replace(
             sp, model_bits=float(tree_bytes(self.model_params) * 8))
         self.codec = cfg.compression
@@ -274,7 +275,8 @@ class AsyncHFLEngine:
         if scheduler is None:
             from repro.core.sweep import build_scheduler
             scheduler = build_scheduler(cfg.scheduler, fed, self.sp, cfg.H,
-                                        K=cfg.K, lr=cfg.lr, seed=cfg.seed)
+                                        K=cfg.K, lr=cfg.lr, seed=cfg.seed,
+                                        arch=cfg.arch)
         self.scheduler = scheduler
         if assigner is None:
             from repro.core.assignment import GeoAssigner

@@ -20,6 +20,12 @@ edge/cloud aggregation through the fused masked-weight
 Tracks the paper's reported quantities: accuracy trajectory, T (13),
 E (14), objective E + λT (15), and transmitted message volume per round
 and cumulative (Fig. 7f/7g), plus the one-off clustering cost (Table II).
+
+The trained payload is pluggable: ``FrameworkConfig.arch`` resolves a
+:class:`repro.models.spec.ModelSpec` through ``configs.registry`` —
+the default ``"hfl-cnn"`` is the paper's CNN (bitwise-identical to the
+pre-spec engines), any other registry id trains that arch's smoke-config
+variant as a sequence classifier (see ``docs/engine.md``).
 """
 from __future__ import annotations
 
@@ -36,13 +42,13 @@ from repro.core import compression as comp
 from repro.core import cost_model as cm
 from repro.core import resource as ra
 from repro.core.clustering import adjusted_rand_index
-from repro.core.hfl import (evaluate_in_batches, hfl_global_iteration,
-                            hfl_global_iteration_core, pad_device_data)
+from repro.core.hfl import (hfl_global_iteration, hfl_global_iteration_core,
+                            pad_device_data)
 from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
                                    VKCScheduler, run_device_clustering)
 from repro.core.scheduling.device_clustering import clustering_cost
+from repro.configs.registry import get_hfl_spec
 from repro.data.partition import FederatedData
-from repro.models import cnn
 from repro.utils import tree_bytes
 
 
@@ -112,6 +118,7 @@ def round_step(apply_fn, sp: cm.SystemParams, params, u, D, p, g, g_cloud,
 
 @dataclasses.dataclass
 class FrameworkConfig:
+    arch: str = "hfl-cnn"           # model payload (configs.registry id)
     scheduler: str = "ikc"          # ikc | vkc | fedavg
     assigner: str = "geo"           # drl | hfel | geo
     H: int = 50
@@ -139,10 +146,13 @@ class HFLFramework:
         key = jax.random.PRNGKey(cfg.seed)
         k_model, k_mini, k_cluster = jax.random.split(key, 3)
 
-        hw = fed.X_test.shape[1:3]
-        ch = fed.X_test.shape[3]
-        self.model_params = cnn.cnn_init(k_model, hw, ch, fed.n_classes)
-        self.apply_fn = cnn.cnn_apply
+        # payload resolution: cfg.arch -> ModelSpec. The default
+        # "hfl-cnn" reproduces the paper CNN construction bit for bit
+        # (same key-split order, same cnn_apply object -> same jit
+        # cache entries as the pre-spec engines).
+        self.spec = get_hfl_spec(cfg.arch)
+        self.model_params = self.spec.init_fn(k_model, fed)
+        self.apply_fn = self.spec.apply_fn
         self.model_bits = tree_bytes(self.model_params) * 8
         self.sp = dataclasses.replace(self.sp, model_bits=float(self.model_bits))
 
@@ -184,17 +194,16 @@ class HFLFramework:
             self.scheduler = FedAvgScheduler(fed.n_devices, cfg.H)
             return
         if cfg.scheduler == "ikc":
-            # mini model ξ on 1x10x10 crops (IKC preprocessing)
-            mini_params = cnn.mini_init(k_mini)
+            # auxiliary mini model ξ on the spec's clustering crop
+            # (images: 1x10x10 random crops; sequences: token crops)
+            mini_params = self.spec.mini_init_fn(k_mini, fed)
             compute_scale = (tree_bytes(mini_params)
                              / max(1, tree_bytes(self.model_params)))
-            crop = jax.vmap(lambda xx, kk: cnn.mini_preprocess(xx, kk))(
-                self.X[:, :, :, :, :1],
-                jax.random.split(k_mini, fed.n_devices))
+            crop = self.spec.mini_preprocess_fn(self.X, k_mini)
             aux_bits = tree_bytes(mini_params) * 8
             labels, _ = run_device_clustering(
-                k_cluster, cnn.mini_apply, mini_params, crop, self.y,
-                self.mask, cfg.K, self.sp.L, cfg.lr,
+                k_cluster, self.spec.mini_apply_fn, mini_params, crop,
+                self.y, self.mask, cfg.K, self.sp.L, cfg.lr,
                 use_kernel=cfg.use_kernel)
             self.scheduler = IKCScheduler(labels, h)
         else:  # vkc: heavyweight global model as auxiliary model
@@ -269,8 +278,8 @@ class HFLFramework:
                 alloc_steps=self.cfg.alloc_steps,
                 agg_kernel=self.cfg.agg_kernel)
 
-        acc = evaluate_in_batches(self.apply_fn, self.model_params,
-                                  self.fed.X_test, self.fed.y_test)
+        acc = self.spec.eval_fn(self.model_params,
+                                self.fed.X_test, self.fed.y_test)
         msg_bits = cm.round_msg_bits(self.sp, sp.Q * H, pop.n_edges,
                                      msg_bits=self.uplink_bits)
         rec = {"iter": i, "acc": acc, "T_i": float(T_i), "E_i": float(E_i),

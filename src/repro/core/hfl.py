@@ -32,11 +32,15 @@ from repro.data.partition import FederatedData
 
 
 def pad_device_data(fed: FederatedData, Dmax: Optional[int] = None):
-    """-> X (N, Dmax, ...), y (N, Dmax), mask (N, Dmax)."""
+    """-> X (N, Dmax, ...), y (N, Dmax), mask (N, Dmax).
+
+    X keeps the source dtype: images stay float32, token sequences stay
+    integer (the model-zoo payloads index embeddings with them).
+    """
     N = fed.n_devices
     Dmax = Dmax or int(max(len(y) for y in fed.y))
     sample_shape = fed.X[0].shape[1:]
-    X = np.zeros((N, Dmax, *sample_shape), np.float32)
+    X = np.zeros((N, Dmax, *sample_shape), fed.X[0].dtype)
     y = np.zeros((N, Dmax), np.int32)
     mask = np.zeros((N, Dmax), np.float32)
     for n in range(N):
@@ -212,20 +216,39 @@ def evaluate_accuracy(apply_fn: Callable, params, X_test, y_test):
     return jnp.mean((jnp.argmax(logits, axis=-1) == y_test).astype(jnp.float32))
 
 
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def _count_correct(apply_fn: Callable, params, X, y, valid):
+    """Correct predictions among rows where ``valid > 0`` (exact int)."""
+    logits = apply_fn(params, X)
+    hit = (jnp.argmax(logits, axis=-1) == y) & (valid > 0)
+    return jnp.sum(hit.astype(jnp.int32))
+
+
 def evaluate_in_batches(apply_fn, params, X_test, y_test, batch: int = 512):
-    """Test accuracy in device-sized batches, host-averaged.
+    """Test accuracy in device-sized batches, host-accumulated.
 
     Chunks the test set so evaluation never materialises one
-    (n_test, ...) activation tensor; each chunk goes through the jitted
-    ``evaluate_accuracy`` (one compiled program per chunk shape — the
-    final ragged chunk compiles separately) and the chunk means are
-    recombined with exact sample-count weights.
+    (n_test, ...) activation tensor. The final ragged chunk is padded up
+    to the chunk shape with a validity mask instead of compiling a
+    second XLA program per (arch, test-set-size) pair; correct counts
+    are integers, so the result is the exact sample-weighted accuracy.
     """
-    accs, ns = [], []
-    for i in range(0, len(y_test), batch):
-        a = evaluate_accuracy(apply_fn, params,
-                              jnp.asarray(X_test[i:i + batch]),
-                              jnp.asarray(y_test[i:i + batch]))
-        accs.append(float(a))
-        ns.append(len(y_test[i:i + batch]))
-    return float(np.average(accs, weights=ns))
+    X_test = np.asarray(X_test)
+    y_test = np.asarray(y_test)
+    n = len(y_test)
+    if n == 0:
+        return 0.0
+    batch = min(batch, n)
+    correct = 0
+    for i in range(0, n, batch):
+        Xc, yc = X_test[i:i + batch], y_test[i:i + batch]
+        k = len(yc)
+        valid = np.zeros(batch, np.float32)
+        valid[:k] = 1.0
+        if k < batch:       # pad the ragged tail to the chunk shape
+            Xc = np.concatenate(
+                [Xc, np.zeros((batch - k, *Xc.shape[1:]), Xc.dtype)])
+            yc = np.concatenate([yc, np.zeros(batch - k, yc.dtype)])
+        correct += int(_count_correct(apply_fn, params, jnp.asarray(Xc),
+                                      jnp.asarray(yc), jnp.asarray(valid)))
+    return correct / n

@@ -44,23 +44,28 @@ from repro.core.hfl import hfl_global_iteration_core, pad_device_data
 from repro.core.scheduling import (FedAvgScheduler, IKCScheduler,
                                    VKCScheduler, run_device_clustering)
 from repro.core.scheduling.schedulers import TracedFedAvg, _topup
+from repro.configs.registry import get_hfl_spec
 from repro.data.partition import FederatedData
-from repro.models import cnn
 from repro.utils import tree_bytes
 
 
 def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
                     H: int, K: int = 10, lr: float = 0.01, seed: int = 0,
                     use_kernel: bool = False,
-                    pop: Optional[cm.Population] = None):
+                    pop: Optional[cm.Population] = None,
+                    arch: str = "hfl-cnn"):
     """Standalone scheduler construction (shared by benchmarks/sweeps).
 
-    IKC clusters with the mini model ξ on 1x10x10 crops, VKC with the
-    full CNN, FedAvg samples uniformly — mirroring
-    ``HFLFramework._setup_scheduler`` without instantiating the whole
-    framework. NOTE: the framework keeps its own copy because its key
-    derivation and clustering-cost/ARI bookkeeping are part of its
-    seeded record; if the clustering recipe changes, update BOTH.
+    IKC clusters with the arch's auxiliary mini model ξ on its
+    clustering crop, VKC with the full payload, FedAvg samples
+    uniformly — mirroring ``HFLFramework._setup_scheduler`` without
+    instantiating the whole framework. NOTE: the framework keeps its own
+    copy because its key derivation and clustering-cost/ARI bookkeeping
+    are part of its seeded record; if the clustering recipe changes,
+    update BOTH. Both the full and the mini init take ``fed.n_classes``
+    (an earlier revision silently defaulted to 10, mispricing
+    ``compute_scale`` and clustering with the wrong logits head whenever
+    ``n_classes != 10``).
 
     With ``pop`` given, returns (scheduler, clustering_stats) where
     clustering_stats carries the Table-II quantities (ari, delay_s,
@@ -76,24 +81,23 @@ def build_scheduler(name: str, fed: FederatedData, sp: cm.SystemParams,
         return (sched, {}) if pop is not None else sched
     if name not in ("ikc", "vkc"):
         raise ValueError(f"unknown scheduler {name!r}")
+    spec = get_hfl_spec(arch)
     key = jax.random.PRNGKey(seed)
     X, y, mask = pad_device_data(fed)
     h = max(1, H // K)
-    full_bits = _tb(cnn.cnn_init(key, fed.X_test.shape[1:3],
-                                 fed.X_test.shape[3])) * 8
+    full = spec.init_fn(key, fed)
+    full_bits = _tb(full) * 8
     if name == "ikc":
-        mini = cnn.mini_init(key)
-        crop = jax.vmap(cnn.mini_preprocess)(
-            X[:, :, :, :, :1], jax.random.split(key, fed.n_devices))
-        labels, _ = run_device_clustering(key, cnn.mini_apply, mini, crop,
-                                          y, mask, K, sp.L, lr,
+        mini = spec.mini_init_fn(key, fed)
+        crop = spec.mini_preprocess_fn(X, key)
+        labels, _ = run_device_clustering(key, spec.mini_apply_fn, mini,
+                                          crop, y, mask, K, sp.L, lr,
                                           use_kernel=use_kernel)
         sched = IKCScheduler(labels, h)
         aux_bits = _tb(mini) * 8
         compute_scale = aux_bits / max(1, full_bits)
     else:
-        full = cnn.cnn_init(key, fed.X_test.shape[1:3], fed.X_test.shape[3])
-        labels, _ = run_device_clustering(key, cnn.cnn_apply, full, X, y,
+        labels, _ = run_device_clustering(key, spec.apply_fn, full, X, y,
                                           mask, K, sp.L, lr,
                                           use_kernel=use_kernel)
         sched = VKCScheduler(labels, h)
@@ -608,9 +612,12 @@ class SweepRunner:
                  model_seed: int = 0, agg_kernel: bool = False,
                  shard: bool = False, mesh=None,
                  lane_chunk: Optional[int] = None,
-                 compression: Optional[comp.CompressionConfig] = None):
+                 compression: Optional[comp.CompressionConfig] = None,
+                 arch: str = "hfl-cnn"):
         assert len(worlds) >= 1
         self.sp, self.lr, self.alloc_steps = sp, lr, alloc_steps
+        self.arch = arch
+        self.spec = get_hfl_spec(arch)
         self.agg_kernel = agg_kernel
         self.lane_chunk = lane_chunk
         self.codec = (compression if compression is not None
@@ -660,13 +667,12 @@ class SweepRunner:
         self.edge_pos_b = jnp.stack(
             [jnp.asarray(p.edge_pos) for p in self.pops])
 
-        hw = self.feds[0].X_test.shape[1:3]
-        ch = self.feds[0].X_test.shape[3]
+        # per-lane model inits from the arch spec (lane worlds share
+        # shapes, so feds[0] fixes the payload geometry for all lanes)
         keys = jax.random.split(jax.random.PRNGKey(model_seed), self.S)
-        inits = [cnn.cnn_init(k, hw, ch, self.feds[0].n_classes)
-                 for k in keys]
+        inits = [self.spec.init_fn(k, self.feds[0]) for k in keys]
         self.params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
-        self.apply_fn = cnn.cnn_apply
+        self.apply_fn = self.spec.apply_fn
         self.model_bits = tree_bytes(inits[0]) * 8
         # codec="none" gives exactly model_bits, so the sp the round jits
         # see is value-identical to the uncompressed runner's (same jit
@@ -1124,7 +1130,8 @@ class SweepRunner:
             H = max(1, int(round(r * self.N)))
             name = "fedavg" if H >= self.N else scheduler
             scheds = [build_scheduler(name, self.feds[s], self.sp, H, K=K,
-                                      lr=self.lr, seed=seeds[s])
+                                      lr=self.lr, seed=seeds[s],
+                                      arch=self.arch)
                       for s in range(self.S)]
             out[r] = self.run(scheds, n_rounds, assign=assign, seeds=seeds,
                               target_acc=target_acc)

@@ -1,3 +1,4 @@
 from repro.data.synthetic import SyntheticSpec, make_dataset, DATASETS  # noqa: F401
+from repro.data.synthetic import SeqSpec, make_seq_dataset, SEQ_DATASETS  # noqa: F401
 from repro.data.partition import FederatedData, partition_noniid  # noqa: F401
 from repro.data.pipeline import batch_iterator, sample_batch  # noqa: F401

@@ -1,10 +1,14 @@
-"""Class-structured synthetic image datasets (offline FashionMNIST/CIFAR-10
-stand-ins).
+"""Class-structured synthetic datasets (offline stand-ins).
 
-Each class k has a smooth random prototype image; a sample is
-``clip(prototype + pixel noise + global brightness jitter, 0, 1)``.
-This preserves the two properties the paper's experiments rely on:
-  1. classes are learnably separable by a small CNN (accuracy curves move),
+Images (``make_dataset``): each class k has a smooth random prototype
+image; a sample is ``clip(prototype + pixel noise + global brightness
+jitter, 0, 1)``. Sequences (``make_seq_dataset``): each class k has a
+random token distribution over the vocabulary; a sample is ``seq_len``
+i.i.d. tokens from that distribution. Both preserve the two properties
+the paper's experiments rely on:
+  1. classes are learnably separable by a small model (accuracy curves
+     move — for sequences, the class token-frequency profile is linearly
+     separable from a mean-pooled embedding),
   2. models locally trained on a majority class have weights that cluster
      by that class (so K-means on auxiliary-model weights recovers the
      majority class; ARI is measurable exactly as in Table II).
@@ -68,6 +72,64 @@ def make_dataset(name: str, n_train: int = 20_000, n_test: int = 2_000,
         bright = rng.normal(0, 0.08, (n, 1, 1, 1))
         X = np.clip(protos[y] + noise + bright, 0.0, 1.0).astype(np.float32)
         return X, y.astype(np.int32)
+
+    X_tr, y_tr = draw(n_train)
+    X_te, y_te = draw(n_test)
+    return X_tr, y_tr, X_te, y_te
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqSpec:
+    """Synthetic sequence-classification task for the model-zoo payloads.
+
+    vocab_size defaults to 257 — at most the smallest smoke-config vocab
+    across the registry archs, so one dataset feeds every arch's
+    embedding table; seq_len 16 is a multiple of the mamba2 smoke SSD
+    chunk (SSM archs require ``seq_len % ssm.chunk == 0``).
+    """
+    name: str
+    seq_len: int = 16
+    vocab_size: int = 257
+    n_classes: int = 10
+    sharpness: float = 2.0      # spread of the per-class token logits
+
+
+SEQ_DATASETS = {
+    "seqcls_syn": SeqSpec("seqcls_syn"),
+}
+
+
+def class_token_dists(spec: SeqSpec, seed: int = 0) -> np.ndarray:
+    """(n_classes, vocab) token distributions, one per class."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(0.0, spec.sharpness,
+                        (spec.n_classes, spec.vocab_size))
+    p = np.exp(logits - logits.max(axis=1, keepdims=True))
+    return p / p.sum(axis=1, keepdims=True)
+
+
+def make_seq_dataset(name: str = "seqcls_syn", n_train: int = 4096,
+                     n_test: int = 512, seed: int = 0, *,
+                     seq_len: int | None = None,
+                     vocab_size: int | None = None,
+                     n_classes: int | None = None):
+    """Returns (X_train, y_train, X_test, y_test); X int32 (n, seq_len)."""
+    spec = SEQ_DATASETS[name]
+    if seq_len or vocab_size or n_classes:
+        spec = dataclasses.replace(
+            spec, seq_len=seq_len or spec.seq_len,
+            vocab_size=vocab_size or spec.vocab_size,
+            n_classes=n_classes or spec.n_classes)
+    cdf = class_token_dists(spec, seed).cumsum(axis=1)
+    rng = np.random.default_rng(seed + 1)
+
+    def draw(n):
+        y = rng.integers(0, spec.n_classes, n)
+        u = rng.random((n, spec.seq_len))
+        # inverse-CDF sampling against each sample's class distribution
+        X = (u[:, :, None] >= cdf[y][:, None, :]).sum(axis=2)
+        return np.minimum(X, spec.vocab_size - 1).astype(np.int32), \
+            y.astype(np.int32)
 
     X_tr, y_tr = draw(n_train)
     X_te, y_te = draw(n_test)

@@ -1,0 +1,89 @@
+"""Sequence-classification heads over the unified decoder backbone.
+
+The HFL engines train ``apply_fn(params, X) -> logits`` classifiers; this
+module wraps ``models/transformer.py`` — one ``ModelConfig`` covering the
+dense / MoE / SSM / hybrid registry families — as such a classifier:
+embed int tokens, run the super-block backbone, RMS-norm, mean-pool over
+the sequence, project to ``n_classes``. The MoE router aux-loss is
+dropped (smoke-scale payloads; the engines' loss is plain softmax
+cross-entropy).
+
+``SeqClassifierApply`` is a frozen dataclass callable so it is hashable
+and equality-stable — the engines pass ``apply_fn`` as a static jit
+argument, and two specs built from the same ``ModelConfig`` must hit the
+same compiled program.
+
+The IKC auxiliary path gets a sequence mini model ξ (embed + mean-pool +
+linear, ~10 KB like the paper's image mini model) trained on a random
+``SEQ_MINI_CROP``-token crop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as transformer_lib
+from repro.models.layers import embed_init, he_normal, rmsnorm
+
+SEQ_MINI_DIM = 8        # mini-model embedding width
+SEQ_MINI_CROP = 8       # tokens kept by the IKC preprocessing crop
+
+
+def seq_cls_init(key, cfg: ModelConfig, n_classes: int) -> Dict:
+    """Backbone params + ``cls_head`` (the lm_head is dropped)."""
+    k_backbone, k_head = jax.random.split(key)
+    params = transformer_lib.init(k_backbone, cfg)
+    params.pop("lm_head", None)
+    params["cls_head"] = he_normal(k_head, (cfg.d_model, n_classes),
+                                   fan_in=cfg.d_model)
+    return params
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqClassifierApply:
+    """``(params, tokens (B, S)) -> logits (B, n_classes)``.
+
+    Tokens are cast to int32 on entry so float-padded cohort tensors
+    (``pad_device_data`` zero rows) index the embedding safely.
+    """
+    cfg: ModelConfig
+
+    def __call__(self, params, tokens) -> jnp.ndarray:
+        cfg = self.cfg
+        tok = tokens.astype(jnp.int32)
+        x = jnp.take(params["embed"], tok, axis=0).astype(cfg.compute_dtype)
+        x, _aux = transformer_lib.backbone(params, x, cfg)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        pooled = x.mean(axis=1).astype(jnp.float32)
+        return pooled @ params["cls_head"]
+
+
+def seq_mini_init(key, vocab: int, n_classes: int,
+                  d_model: int = SEQ_MINI_DIM) -> Dict:
+    """Mini model ξ for IKC clustering: embed + mean-pool + linear."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": embed_init(k1, vocab, d_model),
+        "fc": he_normal(k2, (d_model, n_classes), fan_in=d_model),
+    }
+
+
+def seq_mini_apply(params, tokens) -> jnp.ndarray:
+    """tokens: (B, S_crop) -> logits (B, n_classes)."""
+    x = jnp.take(params["embed"], tokens.astype(jnp.int32), axis=0)
+    return x.mean(axis=1) @ params["fc"]
+
+
+def seq_mini_preprocess(tokens, key) -> jnp.ndarray:
+    """IKC preprocessing: random contiguous ``SEQ_MINI_CROP``-token crop.
+
+    tokens: (B, S) one device's padded samples -> (B, min(S, crop)).
+    """
+    B, S = tokens.shape
+    crop = min(S, SEQ_MINI_CROP)
+    off = jax.random.randint(key, (), 0, S - crop + 1)
+    return jax.lax.dynamic_slice(tokens, (0, off), (B, crop))

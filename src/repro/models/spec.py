@@ -1,0 +1,110 @@
+"""ModelSpec — the payload contract every HFL engine trains over.
+
+The paper's scheduling/assignment machinery is payload-agnostic (eqs.
+(6)/(9)/(12) only read ``model_bits``), so the engines bind to a spec
+instead of a concrete model:
+
+* ``init_fn(key, fed) -> params`` — model init shaped by the federated
+  task (input geometry, ``fed.n_classes``).
+* ``apply_fn(params, X) -> logits`` — hashable and equality-stable: the
+  engines pass it as a static jit argument, so the SAME object must come
+  back for a given arch (``configs.registry.get_hfl_spec`` caches specs)
+  or jit caches fragment. Any input adaptation (e.g. casting padded
+  token tensors back to int32) is folded into ``apply_fn`` so the
+  engines' call sites stay identical across payloads.
+* ``eval_fn(params, X_test, y_test) -> float`` — chunked test accuracy.
+* ``mini_init_fn`` / ``mini_apply_fn`` / ``mini_preprocess_fn`` — the
+  IKC auxiliary model ξ and its input crop (Table I/II clustering path);
+  ``mini_preprocess_fn(X, key)`` maps the padded (N, Dmax, ...) cohort
+  tensor to the clustering inputs, splitting ``key`` per device.
+
+``cnn_spec()`` reproduces the pre-spec engines' construction bit for bit
+(same ``cnn.cnn_apply`` function object, same key-split order), which is
+what keeps ``arch="hfl-cnn"`` on the engines' existing jit cache
+entries — pinned by ``tests/test_model_zoo.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.hfl import evaluate_in_batches
+from repro.models import cnn
+from repro.models import seq_classifier as seqc
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    arch: str                       # registry id (``hfl-cnn``, ...)
+    family: str                     # cnn | dense | moe | ssm | hybrid
+    init_fn: Callable               # (key, fed) -> params
+    apply_fn: Callable              # (params, X) -> logits (static-jit-safe)
+    eval_fn: Callable               # (params, X_test, y_test) -> accuracy
+    mini_init_fn: Callable          # (key, fed) -> aux params (IKC ξ)
+    mini_apply_fn: Callable         # (params, crop) -> logits
+    mini_preprocess_fn: Callable    # (X (N, Dmax, ...), key) -> crops
+
+
+# ------------------------------------------------------------- hfl-cnn
+
+def _cnn_init(key, fed):
+    return cnn.cnn_init(key, fed.X_test.shape[1:3], fed.X_test.shape[3],
+                        fed.n_classes)
+
+
+def _cnn_mini_init(key, fed):
+    return cnn.mini_init(key, fed.n_classes)
+
+
+def _cnn_mini_preprocess(X, key):
+    """Channel 0, random 10x10 crop per device (IKC preprocessing)."""
+    return jax.vmap(cnn.mini_preprocess)(
+        X[:, :, :, :, :1], jax.random.split(key, X.shape[0]))
+
+
+def cnn_spec() -> ModelSpec:
+    return ModelSpec(
+        arch="hfl-cnn", family="cnn",
+        init_fn=_cnn_init, apply_fn=cnn.cnn_apply,
+        eval_fn=functools.partial(evaluate_in_batches, cnn.cnn_apply),
+        mini_init_fn=_cnn_mini_init, mini_apply_fn=cnn.mini_apply,
+        mini_preprocess_fn=_cnn_mini_preprocess)
+
+
+# ----------------------------------------------- registry decoder archs
+
+@dataclasses.dataclass(frozen=True)
+class _SeqInit:
+    cfg: ModelConfig
+
+    def __call__(self, key, fed):
+        return seqc.seq_cls_init(key, self.cfg, fed.n_classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class _SeqMiniInit:
+    vocab: int
+
+    def __call__(self, key, fed):
+        return seqc.seq_mini_init(key, self.vocab, fed.n_classes)
+
+
+def _seq_mini_preprocess(X, key):
+    return jax.vmap(seqc.seq_mini_preprocess)(
+        X, jax.random.split(key, X.shape[0]))
+
+
+def seq_spec(arch: str, cfg: ModelConfig) -> ModelSpec:
+    """Sequence-classification spec over a registry ``ModelConfig``."""
+    apply_fn = seqc.SeqClassifierApply(cfg)
+    return ModelSpec(
+        arch=arch, family=cfg.family,
+        init_fn=_SeqInit(cfg), apply_fn=apply_fn,
+        eval_fn=functools.partial(evaluate_in_batches, apply_fn),
+        mini_init_fn=_SeqMiniInit(cfg.vocab_size),
+        mini_apply_fn=seqc.seq_mini_apply,
+        mini_preprocess_fn=_seq_mini_preprocess)
